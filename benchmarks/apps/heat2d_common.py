@@ -1,0 +1,25 @@
+"""2D heat-equation simulation — the paper's Heat benchmark (pure MPI there,
+pure JAX here). Shared physics for all four CR variants; the variants differ
+ONLY in their checkpoint/restart code, which is what Tables 1/4/5/6 measure.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_grid(n: int) -> jnp.ndarray:
+    g = jnp.zeros((n, n), jnp.float32)
+    g = g.at[0, :].set(100.0)          # hot boundary
+    g = g.at[-1, :].set(-25.0)
+    return g
+
+
+@jax.jit
+def heat_step(g: jnp.ndarray) -> jnp.ndarray:
+    inner = 0.25 * (g[:-2, 1:-1] + g[2:, 1:-1] + g[1:-1, :-2] + g[1:-1, 2:])
+    return g.at[1:-1, 1:-1].set(inner)
+
+
+def checksum(g) -> float:
+    return float(jnp.sum(jnp.abs(g)))

@@ -1,0 +1,42 @@
+"""Heat-2D against the native FTI-style API: manual protect registration,
+explicit status/recover flow modification, manual re-protect before every
+checkpoint, error handling — everything OpenCHK hides (paper Fig. 14)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.apps.heat2d_common import checksum, heat_step, init_grid
+from repro.backends.fti import FTIBackend                                  # [CR]
+from repro.core.comm import LocalComm                                      # [CR]
+from repro.core.storage import StorageConfig                               # [CR]
+
+
+def run(n=128, steps=200, ckpt_every=20, ckpt_dir="/tmp/heat-fti",
+        injector=None, backend=None):
+    grid = init_grid(n)
+    t = 0
+    fti = FTIBackend(StorageConfig(root=ckpt_dir),                         # [CR]
+                     LocalComm(ckpt_dir + "/node-local"),                  # [CR]
+                     dedicated_thread=True)    # FTI has CP threads too      [CR]
+    fti.protect(0, "t", np.int32(t))                                       # [CR]
+    fti.protect(1, "grid", np.asarray(grid))                               # [CR]
+    if fti.status():                                # modified program flow   [CR]
+        recovered = fti.recover()                                          # [CR]
+        t = int(recovered[0])                       # manual deserialization [CR]
+        grid = jnp.asarray(recovered[1])                                   # [CR]
+    restarted = t > 0                                                      # [CR]
+    for step in range(t, steps):
+        grid = heat_step(grid)
+        if injector is not None:
+            injector.maybe_fail(step + 1)
+        if (step + 1) % ckpt_every == 0:                                   # [CR]
+            fti.protect(0, "t", np.int32(step + 1))  # manual re-serialize   [CR]
+            fti.protect(1, "grid", np.asarray(grid))                       # [CR]
+            try:                                                           # [CR]
+                fti.checkpoint(step + 1, level=1)   # async; errors surface  [CR]
+            except RuntimeError as e:               # at the NEXT call       [CR]
+                raise RuntimeError("FTI internal error") from e            # [CR]
+    fti.checkpoint_wait()                                                  # [CR]
+    fti.finalize()                                                         # [CR]
+    return {"checksum": checksum(grid), "restarted": restarted}

@@ -1,0 +1,54 @@
+"""Heat-2D against the native SCR-style file-mode API: the user writes and
+reads the checkpoint file *themselves* through route_file, drives the
+start/complete phase protocol, and modifies program flow for restarts —
+the most verbose variant (paper Figs. 16-19, Table 5)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.apps.heat2d_common import checksum, heat_step, init_grid
+from repro.backends.scr import SCRBackend                                  # [CR]
+from repro.core.comm import LocalComm                                      # [CR]
+from repro.core.formats import CHK5Reader, CHK5Writer                      # [CR]
+from repro.core.storage import StorageConfig                               # [CR]
+
+
+def run(n=128, steps=200, ckpt_every=20, ckpt_dir="/tmp/heat-scr",
+        injector=None, backend=None):
+    grid = init_grid(n)
+    t = 0
+    scr = SCRBackend(StorageConfig(root=ckpt_dir),                         # [CR]
+                     LocalComm(ckpt_dir + "/node-local"),                  # [CR]
+                     checkpoint_interval=ckpt_every)                       # [CR]
+    restarted = False                                                      # [CR]
+    if scr.have_restart() is not None:              # modified program flow  [CR]
+        cid = scr.start_restart()                                          # [CR]
+        path = scr.route_file("heat.ckpt")                                 # [CR]
+        ok = False                                                         # [CR]
+        try:                                                               # [CR]
+            rd = CHK5Reader(path)                   # manual file I/O        [CR]
+            t = int(rd.read_dataset("data/t"))      # manual deserialize     [CR]
+            grid = jnp.asarray(rd.read_dataset("data/grid"))               # [CR]
+            rd.close()                                                     # [CR]
+            ok = True                                                      # [CR]
+        except Exception:                                                  # [CR]
+            t = 0                                                          # [CR]
+        scr.complete_restart(ok)                                           # [CR]
+        restarted = ok and t > 0                                           # [CR]
+    for step in range(t, steps):
+        grid = heat_step(grid)
+        if injector is not None:
+            injector.maybe_fail(step + 1)
+        if (step + 1) % ckpt_every == 0:                                   # [CR]
+            scr.start_checkpoint(step + 1, level=1)                        # [CR]
+            path = scr.route_file("heat.ckpt")                             # [CR]
+            valid = False                                                  # [CR]
+            try:                                                           # [CR]
+                with CHK5Writer(path) as w:         # manual file I/O        [CR]
+                    w.write_dataset("data/t", np.int32(step + 1))          # [CR]
+                    w.write_dataset("data/grid", np.asarray(grid))         # [CR]
+                valid = True                                               # [CR]
+            finally:                                                       # [CR]
+                scr.complete_checkpoint(valid)                             # [CR]
+    return {"checksum": checksum(grid), "restarted": restarted}

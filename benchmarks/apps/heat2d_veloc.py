@@ -1,0 +1,42 @@
+"""Heat-2D against the native VeloC-style API (memory mode): mem_protect
+registration, restart_test/restart protocol, explicit waits (paper Fig. 15,
+Table 6)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.apps.heat2d_common import checksum, heat_step, init_grid
+from repro.backends.veloc import VELOC_FAILURE, VELOC_SUCCESS, VeloCBackend  # [CR]
+from repro.core.comm import LocalComm                                        # [CR]
+from repro.core.storage import StorageConfig                                 # [CR]
+
+
+def run(n=128, steps=200, ckpt_every=20, ckpt_dir="/tmp/heat-veloc",
+        injector=None, backend=None):
+    grid = init_grid(n)
+    t = 0
+    vlc = VeloCBackend(StorageConfig(root=ckpt_dir),                        # [CR]
+                       LocalComm(ckpt_dir + "/node-local"))                 # [CR]
+    vlc.mem_protect(0, np.int32(t), "t")                                    # [CR]
+    vlc.mem_protect(1, np.asarray(grid), "grid")                            # [CR]
+    restarted = False                                                       # [CR]
+    version = vlc.restart_test("heat")              # modified program flow   [CR]
+    if version != VELOC_FAILURE:                                            # [CR]
+        if vlc.restart("heat", version) != VELOC_SUCCESS:                   # [CR]
+            raise RuntimeError("VeloC restart failed")                      # [CR]
+        t = int(vlc.recovered(0))                   # manual deserialize      [CR]
+        grid = jnp.asarray(vlc.recovered(1))                                # [CR]
+        restarted = t > 0                                                   # [CR]
+    for step in range(t, steps):
+        grid = heat_step(grid)
+        if injector is not None:
+            injector.maybe_fail(step + 1)
+        if (step + 1) % ckpt_every == 0:                                    # [CR]
+            vlc.mem_protect(0, np.int32(step + 1), "t")                     # [CR]
+            vlc.mem_protect(1, np.asarray(grid), "grid")                    # [CR]
+            if vlc.checkpoint("heat", step + 1) != VELOC_SUCCESS:           # [CR]
+                raise RuntimeError("VeloC internal error")                  # [CR]
+    vlc.checkpoint_wait()                                                   # [CR]
+    vlc.tcl_finalize()                                                      # [CR]
+    return {"checksum": checksum(grid), "restarted": restarted}

@@ -1,0 +1,60 @@
+"""§4.2.2 analogue: CP-dedicated threads — store-call blocking time.
+
+With a dedicated thread, the training thread pays only the device→host
+snapshot; serialization + redundancy + I/O overlap with compute. The
+benchmark measures the synchronous portion of ``ctx.store`` both ways.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import time
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.context import CheckpointConfig, CheckpointContext
+
+MB = 32
+
+
+def _blocking_time(dedicated: bool, root: str, stores: int = 5) -> float:
+    shutil.rmtree(root, ignore_errors=True)
+    state = {"arr": jnp.asarray(
+        np.random.RandomState(0).randn(MB * 2**18).astype(np.float32))}
+    ctx = CheckpointContext(CheckpointConfig(
+        dir=root, backend="fti", dedicated_thread=dedicated))
+    # warmup
+    ctx.store(state, id=0, level=1)
+    ctx.wait()
+    ts = []
+    for i in range(stores):
+        t0 = time.time()
+        ctx.store(state, id=i + 1, level=1)
+        ts.append(time.time() - t0)
+        ctx.wait()           # drain between samples: isolate the sync part
+    ctx.shutdown()
+    shutil.rmtree(root, ignore_errors=True)
+    return float(np.median(ts))
+
+
+def run() -> Dict[str, float]:
+    sync = _blocking_time(False, "/tmp/ba-sync")
+    dedicated = _blocking_time(True, "/tmp/ba-ded")
+    return {
+        "store_blocking_sync_s": sync,
+        "store_blocking_dedicated_s": dedicated,
+        "speedup": sync / max(dedicated, 1e-9),
+    }
+
+
+def rows():
+    r = run()
+    return [("async/" + k, v * 1e6 if k.endswith("_s") else 0.0, v)
+            for k, v in sorted(r.items())]
+
+
+if __name__ == "__main__":
+    for name, us, v in rows():
+        print(f"{name},{us},{v}")

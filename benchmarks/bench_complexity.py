@@ -1,0 +1,48 @@
+"""Table 1 analogue: cyclomatic complexity of the heat-2d CR variants.
+
+CC = 1 + decision points (if/for/while/except/boolop/ternary/comprehension),
+computed with ``ast`` over each variant's ``run`` function (the paper used
+Lizard; same metric definition).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict
+
+from benchmarks.bench_sloc import APPS
+
+
+def cyclomatic_complexity(path: str, func: str = "run") -> int:
+    tree = ast.parse(open(path).read())
+    target = None
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == func:
+            target = node
+            break
+    assert target is not None, f"no {func}() in {path}"
+    cc = 1
+    for node in ast.walk(target):
+        if isinstance(node, (ast.If, ast.For, ast.While, ast.IfExp,
+                             ast.ExceptHandler, ast.Assert,
+                             ast.ListComp, ast.DictComp, ast.SetComp,
+                             ast.GeneratorExp)):
+            cc += 1
+        elif isinstance(node, ast.BoolOp):
+            cc += len(node.values) - 1
+    return cc
+
+
+def run() -> Dict[str, float]:
+    base = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    return {f"cc_{k}": float(cyclomatic_complexity(os.path.join(base, p)))
+            for k, p in APPS.items()}
+
+
+def rows():
+    return [("complexity/" + k, 0.0, v) for k, v in sorted(run().items())]
+
+
+if __name__ == "__main__":
+    for name, _, v in rows():
+        print(f"{name},{v}")

@@ -1,0 +1,68 @@
+"""Fig. 12 analogue: wall-time overhead of OpenCHK vs native backends.
+
+Methodology reproduced from §6.1: first run with a fault injected at 90 %
+progress, then restart to completion; time the whole process. Ratio
+OpenCHK/native should be ≈1 (paper: within noise, <2 % worst case).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import time
+from typing import Dict
+
+from benchmarks.apps import heat2d_fti, heat2d_openchk, heat2d_scr, heat2d_veloc
+from repro.ft.failures import FaultInjector, SimulatedFault
+
+STEPS = 200
+N = 768             # 2.25 MB grid → checkpoint I/O is non-trivial
+EVERY = 20          # 10 checkpoints per run, like the paper's 1/minute × 10
+
+
+def timed_run_with_fault(mod, ckpt_dir, backend=None) -> float:
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+    # warm the jit cache so compile time isn't charged to the first variant
+    from benchmarks.apps.heat2d_common import heat_step, init_grid
+    heat_step(init_grid(N)).block_until_ready()
+    t0 = time.time()
+    inj = FaultInjector(total_steps=STEPS, at_progress=0.9)
+    try:
+        mod.run(n=N, steps=STEPS, ckpt_every=EVERY, ckpt_dir=ckpt_dir,
+                injector=inj, backend=backend)
+    except SimulatedFault:
+        # a real abort kills the CP thread with the process; the in-process
+        # simulation must drain it so the restart doesn't race an orphan
+        from repro.core.async_engine import drain_all
+        drain_all()
+    out = mod.run(n=N, steps=STEPS, ckpt_every=EVERY, ckpt_dir=ckpt_dir,
+                  backend=backend)
+    assert out["restarted"], "restart did not engage"
+    dt = time.time() - t0
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+    return dt
+
+
+def run(repeats: int = 3) -> Dict[str, float]:
+    natives = {"fti": heat2d_fti, "scr": heat2d_scr, "veloc": heat2d_veloc}
+    out: Dict[str, float] = {}
+    for backend, native_mod in natives.items():
+        t_native = min(timed_run_with_fault(
+            native_mod, f"/tmp/bo-native-{backend}") for _ in range(repeats))
+        t_openchk = min(timed_run_with_fault(
+            heat2d_openchk, f"/tmp/bo-openchk-{backend}", backend=backend)
+            for _ in range(repeats))
+        out[f"native_{backend}_s"] = t_native
+        out[f"openchk_{backend}_s"] = t_openchk
+        out[f"overhead_ratio_{backend}"] = t_openchk / t_native
+    return out
+
+
+def rows(repeats: int = 2):
+    r = run(repeats)
+    return [("overhead/" + k, v * 1e6 if k.endswith("_s") else 0.0, v)
+            for k, v in sorted(r.items())]
+
+
+if __name__ == "__main__":
+    for name, us, v in rows():
+        print(f"{name},{us},{v}")

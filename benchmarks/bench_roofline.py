@@ -1,0 +1,43 @@
+"""§Roofline aggregation: read reports/dryrun/*.json → per-cell terms table.
+
+Run ``python -m repro.launch.dryrun --all --both-meshes`` first (the final
+EXPERIMENTS.md tables are generated from the same reports via
+benchmarks/make_experiments_tables.py).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_reports(pattern: str = "reports/dryrun/*.json") -> List[Dict]:
+    out = []
+    for p in sorted(glob.glob(pattern)):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def rows():
+    reports = load_reports()
+    out = []
+    n_ok = n_skip = 0
+    for r in reports:
+        if r.get("status") == "skipped":
+            n_skip += 1
+            continue
+        n_ok += 1
+        cell = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        out.append((f"roofline/{cell}/t_bound_us",
+                    max(r["t_compute"], r["t_memory"], r["t_collective"]) * 1e6,
+                    r["roofline_fraction"]))
+    out.append(("roofline/cells_compiled", 0.0, float(n_ok)))
+    out.append(("roofline/cells_skipped_by_design", 0.0, float(n_skip)))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, v in rows():
+        print(f"{name},{us},{v}")

@@ -1,0 +1,64 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §6).
+
+Prints ``name,us_per_call,derived`` CSV. Sub-benchmarks:
+  sloc          Tables 4–6 (programmability)     bench_sloc
+  complexity    Table 1 (cyclomatic complexity)  bench_complexity
+  overhead      Fig. 12 (OpenCHK vs native)      bench_overhead
+  differential  Fig. 7 (dCP vs dirty ratio)      bench_differential
+  async         §4.2.2 (CP-dedicated threads)    bench_async
+  levels        §4.2.1 (multi-level L1–L4)       bench_levels
+  roofline      §Roofline (dry-run aggregation)  bench_roofline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of benchmarks to run")
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer repeats (CI mode)")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_async,
+        bench_complexity,
+        bench_differential,
+        bench_levels,
+        bench_overhead,
+        bench_roofline,
+        bench_sloc,
+    )
+
+    suites = {
+        "sloc": bench_sloc.rows,
+        "complexity": bench_complexity.rows,
+        "roofline": bench_roofline.rows,
+        "levels": bench_levels.rows,
+        "async": bench_async.rows,
+        "differential": bench_differential.rows,
+        "overhead": (lambda: bench_overhead.rows(repeats=1)) if args.fast
+        else bench_overhead.rows,
+    }
+    chosen = args.only or list(suites)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in chosen:
+        try:
+            for row in suites[name]():
+                n, us, derived = row
+                print(f"{n},{us:.3f},{derived}")
+        except Exception:  # noqa: BLE001 — report and continue
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Differential checkpointing (paper §4.2.3): only dirty blocks are written;
+past the ~95 % dirty break-even the engine auto-promotes to FULL. Inspect
+the resulting CHK5 files with ``python -m repro.tools.chkls <file>``.
+
+Run:  PYTHONPATH=src python examples/differential_demo.py
+"""
+import glob
+import os
+import shutil
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.context import CHK_DIFF, CheckpointConfig, CheckpointContext
+
+CKPT = "/tmp/openchk-diff-example"
+
+
+def main():
+    shutil.rmtree(CKPT, ignore_errors=True)
+    rng = np.random.RandomState(0)
+    state = {"params": jnp.asarray(rng.randn(1 << 20).astype(np.float32)),
+             "step": jnp.int32(0)}
+
+    ctx = CheckpointContext(CheckpointConfig(
+        dir=CKPT, backend="fti", block_bytes=16_384, dedicated_thread=False))
+
+    rep = ctx.store(state, id=1, level=1)                    # base FULL
+    print(f"id=1 FULL   {rep.bytes_payload:>10,d} B")
+
+    # touch 1 % of the data → tiny delta
+    state["params"] = state["params"].at[:10_000].add(1.0)
+    state["step"] = jnp.int32(1)
+    rep = ctx.store(state, id=2, level=1, kind=CHK_DIFF)
+    print(f"id=2 {rep.kind:5s}  {rep.bytes_payload:>10,d} B "
+          f"(dirty ratio {rep.dirty_ratio:.3f})")
+
+    # touch everything → engine promotes to FULL (paper's 95 % break-even)
+    state["params"] = state["params"] + 1.0
+    state["step"] = jnp.int32(2)
+    rep = ctx.store(state, id=3, level=1, kind=CHK_DIFF)
+    print(f"id=3 {rep.kind:5s}  {rep.bytes_payload:>10,d} B "
+          f"(dirty ratio {rep.dirty_ratio:.3f}, promoted={rep.promoted_full})")
+
+    ctx.shutdown()
+
+    # restore replays base + deltas exactly
+    ctx2 = CheckpointContext(CheckpointConfig(dir=CKPT, backend="fti"))
+    got = ctx2.load({"params": jnp.zeros(1 << 20), "step": jnp.int32(0)})
+    assert int(got["step"]) == 2
+    assert bool(jnp.all(got["params"] == state["params"]))
+    print("replayed restore exact ✓")
+    ctx2.shutdown()
+
+    files = glob.glob(os.path.join(CKPT, "**", "*.chk5"), recursive=True)
+    print(f"\ninspect the checkpoint files (HDF5-analogue containers):")
+    for f in sorted(files)[:3]:
+        print(f"  python -m repro.tools.chkls {f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Quickstart: the OpenCHK directives on a toy training loop.
+
+The paper's full CR surface is five lines (§6.3):
+    init (2: config + context), load (1), store (1), shutdown (1).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+      (run it twice — the second run restarts from the checkpoint)
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.context import CheckpointConfig, CheckpointContext
+
+# --- application state: any pytree -------------------------------------- #
+state = {"step": jnp.int32(0), "w": jnp.zeros(16)}
+
+
+def update(s):
+    return {"step": s["step"] + 1, "w": s["w"] + 0.1}
+
+
+# --- the five CR lines --------------------------------------------------- #
+cfg = CheckpointConfig(dir="/tmp/openchk-quickstart")            # 1 (config)
+ctx = CheckpointContext(cfg)                                     # 2 (chk init)
+state = ctx.load(state)                                          # 3 (chk load)
+
+start = int(state["step"])
+if ctx.restarted:
+    print(f"transparent restart: resuming from step {start}")
+
+for t in range(start, 50):
+    state = update(state)
+    ctx.store(state, id=t + 1, level=1, if_=(t + 1) % 10 == 0)   # 4 (chk store)
+
+ctx.shutdown()                                                   # 5 (chk shutdown)
+print(f"done at step {int(state['step'])}, w[0]={float(state['w'][0]):.2f}")
+print("run me again to see the restart path; rm -rf /tmp/openchk-quickstart to reset")

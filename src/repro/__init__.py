@@ -1,0 +1,7 @@
+"""repro: OpenCHK-JAX — directive-style checkpoint/restart for multi-pod JAX.
+
+Reproduction of "Extending the OpenCHK Model with Advanced Checkpoint
+Features" (Maroñas et al., 2020) as a production-grade JAX training
+framework. See DESIGN.md.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+"""Checkpoint backends: FTI-like, SCR-like, VeloC-like (behind TCL)."""

@@ -1,0 +1,49 @@
+"""Backend base: the "native library" surface each backend exposes.
+
+Each backend mirrors the real library's API shape (names, call protocol,
+quirks) — that is what the paper's SLOC/programmability comparison is
+about: using these *directly* is verbose; using them through the OpenCHK
+directives is five lines (benchmarks/bench_sloc.py reproduces Tables 4–6).
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.core.comm import Communicator
+from repro.core.storage import StorageConfig, StorageEngine, StoreReport
+
+
+class Backend(abc.ABC):
+    """Capabilities + the uniform entry points TCL drives."""
+
+    name: str = "?"
+    supports_diff: bool = False
+    supports_dedicated_thread: bool = False
+    max_level: int = 4
+
+    def __init__(self, cfg: StorageConfig, comm: Communicator):
+        self.cfg = cfg
+        self.comm = comm
+        self.engine = StorageEngine(cfg, comm)
+        self.stats: Dict[str, Any] = {"stores": 0, "loads": 0,
+                                      "diff_fallbacks": 0, "bytes": 0}
+
+    # --- uniform surface driven by TCL -------------------------------- #
+
+    @abc.abstractmethod
+    def tcl_store(self, named: Dict[str, np.ndarray], ckpt_id: int,
+                  level: int, kind: str) -> StoreReport:
+        ...
+
+    @abc.abstractmethod
+    def tcl_load(self) -> Optional[Dict[str, np.ndarray]]:
+        ...
+
+    def tcl_wait(self) -> None:
+        """Fence asynchronous work (default: synchronous backend)."""
+
+    def tcl_finalize(self) -> None:
+        self.tcl_wait()

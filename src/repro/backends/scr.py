@@ -1,0 +1,149 @@
+"""SCR-like backend: file-mode with ``route_file`` semantics and SCR's
+start/complete checkpoint-phase protocol + custom redundancy groups.
+
+The user (or TCL) is handed a *path* to write; SCR decides where that path
+lives (which tier), applies the redundancy scheme on complete, and manages
+restart discovery (`have_restart` → `start_restart` → route → complete).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.backends.base import Backend
+from repro.core import manifest as mf
+from repro.core.comm import Communicator
+from repro.core.formats import CHK5Reader, CHK5Writer
+from repro.core.storage import CHK_FULL, StorageConfig, StoreReport
+from repro.redundancy.partner import replicate, store_partner_copy
+
+
+class SCRBackend(Backend):
+    name = "scr"
+    supports_diff = False            # SCR has no checkpoint kinds
+    supports_dedicated_thread = False
+    max_level = 4
+
+    def __init__(self, cfg: StorageConfig, comm: Communicator,
+                 checkpoint_interval: int = 1):
+        super().__init__(cfg, comm)
+        self._phase: Optional[str] = None
+        self._cur_id: Optional[int] = None
+        self._cur_level: int = 2
+        self._routed: Dict[str, str] = {}
+        self._since_ckpt = 0
+        self._interval = checkpoint_interval
+
+    # ----------------------- native SCR-style API ---------------------- #
+
+    def need_checkpoint(self) -> bool:
+        self._since_ckpt += 1
+        return self._since_ckpt >= self._interval
+
+    def start_checkpoint(self, ckpt_id: int, level: int = 2) -> None:
+        assert self._phase is None, "nested SCR checkpoint phase"
+        self._phase = "ckpt"
+        self._cur_id = ckpt_id
+        self._cur_level = level
+        root = self.engine._tier_root(level)
+        mf.begin(root, ckpt_id)
+        self._routed.clear()
+        self._since_ckpt = 0
+
+    def route_file(self, name: str) -> str:
+        """SCR_Route_file: where should this rank write ``name``?"""
+        assert self._phase in ("ckpt", "restart"), "route_file outside phase"
+        if self._phase == "ckpt":
+            root = self.engine._tier_root(self._cur_level)
+            d = mf.ckpt_dir(root, self._cur_id, tmp=True)
+            path = os.path.join(d, f"rank{self.comm.rank}.chk5")
+            self._routed[name] = path
+            return path
+        root, cid = self._restart_src
+        return os.path.join(mf.ckpt_dir(root, cid), f"rank{self.comm.rank}.chk5")
+
+    def complete_checkpoint(self, valid: bool) -> Optional[StoreReport]:
+        assert self._phase == "ckpt"
+        self._phase = None
+        ckpt_id, level = self._cur_id, self._cur_level
+        root = self.engine._tier_root(level)
+        if not valid:
+            mf.abort(root, ckpt_id)
+            return None
+        d = mf.ckpt_dir(root, ckpt_id, tmp=True)
+        nbytes = sum(os.path.getsize(p) for p in
+                     (os.path.join(d, f) for f in os.listdir(d))
+                     if os.path.isfile(p))
+        # redundancy on the routed files
+        if level == 2:
+            for path in self._routed.values():
+                replicate(self.comm, self.engine.topo, ckpt_id,
+                          open(path, "rb").read())
+            self.comm.barrier()
+            store_partner_copy(self.comm, self.engine.topo, ckpt_id, d)
+        elif level == 3:
+            path = next(iter(self._routed.values()))
+            self.engine._erasure_encode(ckpt_id, d, path)
+        statuses = self.comm.allgather(
+            {"rank": self.comm.rank, "ok": True, "nbytes": nbytes})
+        mf.write_manifest(root, ckpt_id, {
+            "kind": CHK_FULL, "level": level, "world": self.comm.world,
+            "ranks": statuses, "file_mode": True,
+        })
+        mf.commit(root, ckpt_id, keep_last=self.cfg.keep_last_full)
+        self.stats["stores"] += 1
+        self.stats["bytes"] += nbytes
+        return StoreReport(ckpt_id, level, CHK_FULL, nbytes, 0.0)
+
+    def have_restart(self) -> Optional[int]:
+        ids = self.engine.available_ids()
+        return ids[-1][0] if ids else None
+
+    def start_restart(self) -> Optional[int]:
+        ids = self.engine.available_ids()
+        if not ids:
+            return None
+        cid, root = ids[-1]
+        self._phase = "restart"
+        self._restart_src = (root, cid)
+        return cid
+
+    def complete_restart(self, ok: bool) -> None:
+        assert self._phase == "restart"
+        self._phase = None
+        if ok:
+            self.stats["loads"] += 1
+
+    # ----------------------- TCL uniform surface ----------------------- #
+
+    def tcl_store(self, named, ckpt_id, level, kind) -> Optional[StoreReport]:
+        if kind != CHK_FULL:
+            self.stats["diff_fallbacks"] += 1      # SCR: kinds unsupported
+        self.start_checkpoint(ckpt_id, min(level, self.max_level))
+        path = self.route_file("openchk.chk5")
+        with CHK5Writer(path) as w:
+            w.set_attrs("", {"kind": CHK_FULL, "id": ckpt_id})
+            for name, arr in named.items():
+                w.write_dataset(f"data/{name}", np.asarray(arr))
+        return self.complete_checkpoint(valid=True)
+
+    def tcl_load(self):
+        cid = self.start_restart()
+        if cid is None:
+            return None
+        path = self.route_file("openchk.chk5")
+        blob = self.engine._rank_payload(self._restart_src[0], cid,
+                                         self.comm.rank)
+        if blob is None:
+            self.complete_restart(False)
+            return None
+        import io
+        rd = CHK5Reader(io.BytesIO(blob))
+        named = {ds[len("data/"):]: rd.read_dataset(ds)
+                 for ds in rd.datasets() if ds.startswith("data/")}
+        rd.close()
+        self.complete_restart(True)
+        return named

@@ -1,0 +1,108 @@
+"""VeloC-like backend: memory-mode protect + asynchronous persist.
+
+Mirrors VeloC's API: ``mem_protect / checkpoint(name, version) /
+checkpoint_wait / restart_test / restart``. Async by design (the paper's
+§4.2.2 is supported here and in FTI); **no checkpoint kinds** — a CHK_DIFF
+request falls back to FULL and is counted in stats (paper §3: "VeloC is
+still missing some features ... e.g. different checkpointing types").
+Two tiers: scratch (node-local, level ≤3 → 1) and persistent (level 4).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.backends.base import Backend
+from repro.core.async_engine import CPDedicatedThread
+from repro.core.comm import Communicator
+from repro.core.storage import CHK_FULL, StorageConfig, StoreReport
+
+VELOC_SUCCESS = 0
+VELOC_FAILURE = -1
+
+
+class VeloCBackend(Backend):
+    name = "veloc"
+    supports_diff = False
+    supports_dedicated_thread = True
+    max_level = 4
+
+    def __init__(self, cfg: StorageConfig, comm: Communicator,
+                 mode: str = "memory"):
+        super().__init__(cfg, comm)
+        assert mode in ("memory", "file")
+        self.mode = mode
+        self._protected: Dict[int, Tuple[str, np.ndarray]] = {}
+        self._cp = CPDedicatedThread()
+
+    # ----------------------- native VeloC-style API -------------------- #
+
+    def mem_protect(self, pid: int, arr, name: str = "region") -> int:
+        self._protected[pid] = (name, arr)
+        return VELOC_SUCCESS
+
+    def checkpoint(self, name: str, version: int) -> int:
+        named = {f"p{pid}/{n}": np.asarray(a)
+                 for pid, (n, a) in self._protected.items()}
+        level = 1 if self.mode == "memory" else 4
+        self._cp.check_errors()
+        self._cp.submit(version, lambda: self._store(named, version, level))
+        return VELOC_SUCCESS
+
+    def checkpoint_wait(self) -> int:
+        self._cp.wait()
+        self._cp.check_errors()
+        return VELOC_SUCCESS
+
+    def restart_test(self, name: str, version: int = 0) -> int:
+        self.checkpoint_wait()
+        ids = self.engine.available_ids()
+        return ids[-1][0] if ids else VELOC_FAILURE
+
+    def restart(self, name: str, version: int) -> int:
+        got = self.engine.load_latest()
+        if got is None:
+            return VELOC_FAILURE
+        named, _ = got
+        for pid, (n, _a) in self._protected.items():
+            key = f"p{pid}/{n}"
+            if key not in named:
+                return VELOC_FAILURE
+            self._protected[pid] = (n, named[key])
+        self.stats["loads"] += 1
+        return VELOC_SUCCESS
+
+    def recovered(self, pid: int) -> np.ndarray:
+        return self._protected[pid][1]
+
+    # ----------------------- TCL uniform surface ----------------------- #
+
+    def _store(self, named, ckpt_id, level) -> StoreReport:
+        rep = self.engine.store(named, ckpt_id, level, CHK_FULL,
+                                diff_supported=False)
+        self.stats["stores"] += 1
+        self.stats["bytes"] += rep.bytes_payload
+        return rep
+
+    def tcl_store(self, named, ckpt_id, level, kind) -> Optional[StoreReport]:
+        if kind != CHK_FULL:
+            self.stats["diff_fallbacks"] += 1
+        self._cp.check_errors()
+        self._cp.submit(ckpt_id,
+                        lambda: self._store(named, ckpt_id, min(level, 4)))
+        return None
+
+    def tcl_load(self):
+        self.checkpoint_wait()
+        got = self.engine.load_latest()
+        if got is None:
+            return None
+        self.stats["loads"] += 1
+        return got[0]
+
+    def tcl_wait(self) -> None:
+        self.checkpoint_wait()
+
+    def tcl_finalize(self) -> None:
+        self._cp.shutdown()

@@ -1,0 +1,1 @@
+"""OpenCHK core: the paper's directive model as a JAX checkpoint API."""

@@ -1,0 +1,215 @@
+"""CHK5 — an HDF5-inspired self-describing hierarchical checkpoint container.
+
+The paper's §4.2.4 stores checkpoints in HDF5 so resilience data doubles as
+analyzable scientific data. h5py is not available in this container, so we
+implement the format from scratch with the same semantics:
+
+- hierarchical **groups** ("/data/params/...", "/delta/...", ...)
+- typed **datasets** (dtype, shape, crc32, byte offset) supporting partial
+  (byte-range) reads — required for elastic resharding restores
+- **attributes** on groups and datasets (JSON-serializable)
+- a msgpack **index** at the tail, so a file is readable without scanning
+
+Layout::
+
+    [8B magic "CHK5\\x00\\x01\\x00\\x00"]
+    [dataset payloads ... raw C-order bytes]
+    [msgpack index]
+    [8B u64 index length][4B crc32(index)][8B magic tail "5KHC...."]
+
+Writers are append-only; readers are mmap-free (seek+read) so partial
+restores touch only the bytes they need. ``python -m repro.tools.chkls``
+pretty-prints any CHK5 file (the "use any HDF5 tool" analogue).
+"""
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import msgpack
+import numpy as np
+
+MAGIC = b"CHK5\x00\x01\x00\x00"
+TAIL = b"5KHC\x00\x01\x00\x00"
+
+try:  # numpy has no native bfloat16; jax ships ml_dtypes
+    import ml_dtypes
+    _EXTRA_DTYPES = {
+        "bfloat16": np.dtype(ml_dtypes.bfloat16),
+        "float8_e4m3fn": np.dtype(ml_dtypes.float8_e4m3fn),
+        "float8_e5m2": np.dtype(ml_dtypes.float8_e5m2),
+    }
+except ImportError:  # pragma: no cover
+    _EXTRA_DTYPES = {}
+
+
+def dtype_to_str(dt) -> str:
+    dt = np.dtype(dt)
+    for name, cand in _EXTRA_DTYPES.items():
+        if dt == cand:
+            return name
+    return dt.str
+
+
+def str_to_dtype(s: str) -> np.dtype:
+    if s in _EXTRA_DTYPES:
+        return _EXTRA_DTYPES[s]
+    return np.dtype(s)
+
+
+class CHK5Writer:
+    def __init__(self, path: str):
+        self.path = path
+        self._f = open(path, "wb")
+        self._f.write(MAGIC)
+        self._index: Dict[str, Any] = {"groups": {}, "datasets": {}, "attrs": {}}
+        self._closed = False
+
+    # ------------------------------------------------------------------ #
+
+    def set_attrs(self, group: str, attrs: Dict[str, Any]) -> None:
+        self._index["attrs"].setdefault(group, {}).update(attrs)
+
+    def write_dataset(self, name: str, arr: np.ndarray,
+                      attrs: Optional[Dict[str, Any]] = None) -> None:
+        """``name`` is a slash path, e.g. "data/params/embed"."""
+        arr = np.asarray(arr)
+        shape = list(arr.shape)              # ascontiguousarray promotes 0-d
+        arr = np.ascontiguousarray(arr)
+        off = self._f.tell()
+        payload = arr.tobytes()
+        self._f.write(payload)
+        parts = name.strip("/").split("/")
+        for i in range(1, len(parts)):
+            self._index["groups"].setdefault("/".join(parts[:i]), {})
+        self._index["datasets"][name.strip("/")] = {
+            "offset": off,
+            "nbytes": len(payload),
+            "dtype": dtype_to_str(arr.dtype),
+            "shape": shape,
+            "crc32": zlib.crc32(payload) & 0xFFFFFFFF,
+            "attrs": attrs or {},
+        }
+
+    def write_bytes(self, name: str, payload: bytes,
+                    attrs: Optional[Dict[str, Any]] = None) -> None:
+        off = self._f.tell()
+        self._f.write(payload)
+        self._index["datasets"][name.strip("/")] = {
+            "offset": off,
+            "nbytes": len(payload),
+            "dtype": "bytes",
+            "shape": [len(payload)],
+            "crc32": zlib.crc32(payload) & 0xFFFFFFFF,
+            "attrs": attrs or {},
+        }
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        idx = msgpack.packb(self._index, use_bin_type=True)
+        self._f.write(idx)
+        self._f.write(struct.pack("<Q", len(idx)))
+        self._f.write(struct.pack("<I", zlib.crc32(idx) & 0xFFFFFFFF))
+        self._f.write(TAIL)
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        self._f.close()
+        self._closed = True
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        self.close()
+
+
+class CHK5CorruptionError(RuntimeError):
+    pass
+
+
+class CHK5Reader:
+    def __init__(self, path, verify: bool = False):
+        """``path``: filesystem path or a seekable binary file object."""
+        if hasattr(path, "seek"):
+            self.path = "<memory>"
+            self._f = path
+            self._f.seek(0)
+        else:
+            self.path = path
+            self._f = open(path, "rb")
+        head = self._f.read(8)
+        if head != MAGIC:
+            raise CHK5CorruptionError(f"{path}: bad magic {head!r}")
+        self._f.seek(-20, os.SEEK_END)
+        tail = self._f.read(20)
+        idx_len = struct.unpack("<Q", tail[:8])[0]
+        idx_crc = struct.unpack("<I", tail[8:12])[0]
+        if tail[12:] != TAIL:
+            raise CHK5CorruptionError(f"{path}: bad tail magic")
+        self._f.seek(-(20 + idx_len), os.SEEK_END)
+        idx_raw = self._f.read(idx_len)
+        if (zlib.crc32(idx_raw) & 0xFFFFFFFF) != idx_crc:
+            raise CHK5CorruptionError(f"{path}: index crc mismatch")
+        self._index = msgpack.unpackb(idx_raw, raw=False)
+        if verify:
+            self.verify_all()
+
+    # ------------------------------------------------------------------ #
+
+    def datasets(self) -> List[str]:
+        return sorted(self._index["datasets"])
+
+    def groups(self) -> List[str]:
+        return sorted(self._index["groups"])
+
+    def attrs(self, group: str = "") -> Dict[str, Any]:
+        return self._index["attrs"].get(group, {})
+
+    def info(self, name: str) -> Dict[str, Any]:
+        return self._index["datasets"][name.strip("/")]
+
+    def read_dataset(self, name: str, verify: bool = True) -> np.ndarray:
+        m = self.info(name)
+        self._f.seek(m["offset"])
+        raw = self._f.read(m["nbytes"])
+        if verify and (zlib.crc32(raw) & 0xFFFFFFFF) != m["crc32"]:
+            raise CHK5CorruptionError(f"{self.path}:{name}: payload crc mismatch")
+        if m["dtype"] == "bytes":
+            raise TypeError(f"{name} is a raw-bytes dataset; use read_bytes")
+        return np.frombuffer(raw, dtype=str_to_dtype(m["dtype"])).reshape(m["shape"])
+
+    def read_bytes(self, name: str, verify: bool = True) -> bytes:
+        m = self.info(name)
+        self._f.seek(m["offset"])
+        raw = self._f.read(m["nbytes"])
+        if verify and (zlib.crc32(raw) & 0xFFFFFFFF) != m["crc32"]:
+            raise CHK5CorruptionError(f"{self.path}:{name}: payload crc mismatch")
+        return raw
+
+    def read_range(self, name: str, start_elem: int, n_elems: int) -> np.ndarray:
+        """Partial read of a flattened C-order element range (no crc check —
+        used by elastic resharding to touch only required bytes)."""
+        m = self.info(name)
+        dt = str_to_dtype(m["dtype"])
+        self._f.seek(m["offset"] + start_elem * dt.itemsize)
+        raw = self._f.read(n_elems * dt.itemsize)
+        return np.frombuffer(raw, dtype=dt)
+
+    def verify_all(self) -> None:
+        for name, m in self._index["datasets"].items():
+            self._f.seek(m["offset"])
+            raw = self._f.read(m["nbytes"])
+            if (zlib.crc32(raw) & 0xFFFFFFFF) != m["crc32"]:
+                raise CHK5CorruptionError(f"{self.path}:{name}: crc mismatch")
+
+    def close(self):
+        self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        self.close()

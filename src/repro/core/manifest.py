@@ -1,0 +1,130 @@
+"""Checkpoint directory layout, manifests, atomic commit, retention.
+
+Layout (one tree per storage tier)::
+
+    <tier_root>/
+      ckpt-<id>/                 (committed — atomic os.replace from .tmp)
+        manifest.json            (written last inside .tmp, so a committed
+                                  dir always has a complete manifest)
+        rank<k>.chk5             per-rank payload
+        rank<k>.partner<j>.chk5  partner replica of rank j held by rank k (L2)
+        parity.group<g>.chk5     erasure parity for node-group g (L3)
+      latest                     text file: id of newest committed checkpoint
+
+Commit protocol (coordinated checkpointing, §4.2.1): every rank writes its
+payload into ``ckpt-<id>.tmp``; rank 0 writes the manifest after an
+allgather of per-rank status; the .tmp → final rename is the commit point.
+A checkpoint with a quorum of rank payloads + partner copies covering the
+stragglers is still restorable (straggler mitigation — ft/straggler.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+MANIFEST = "manifest.json"
+LATEST = "latest"
+
+
+def ckpt_dir(root: str, ckpt_id: int, tmp: bool = False) -> str:
+    return os.path.join(root, f"ckpt-{ckpt_id}" + (".tmp" if tmp else ""))
+
+
+def rank_file(root: str, ckpt_id: int, rank: int, tmp: bool = False) -> str:
+    return os.path.join(ckpt_dir(root, ckpt_id, tmp), f"rank{rank}.chk5")
+
+
+def begin(root: str, ckpt_id: int) -> str:
+    d = ckpt_dir(root, ckpt_id, tmp=True)
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+def write_manifest(root: str, ckpt_id: int, meta: Dict[str, Any]) -> None:
+    d = ckpt_dir(root, ckpt_id, tmp=True)
+    meta = dict(meta, id=ckpt_id, wall_time=time.time())
+    tmp = os.path.join(d, MANIFEST + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(meta, f, indent=1, sort_keys=True)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(d, MANIFEST))
+
+
+def commit(root: str, ckpt_id: int, keep_last: int = 2) -> str:
+    """Atomic rename; updates ``latest``; prunes old checkpoints.
+
+    If the destination already exists (coordinated store on a *shared* tier:
+    another rank committed first), the commit merges — per-rank files are
+    disjoint, so files are moved in and the manifest is refreshed."""
+    src = ckpt_dir(root, ckpt_id, tmp=True)
+    dst = ckpt_dir(root, ckpt_id)
+    if not os.path.exists(os.path.join(src, MANIFEST)):
+        raise RuntimeError(f"commit without manifest: {src}")
+    if os.path.exists(dst):
+        for name in os.listdir(src):
+            os.replace(os.path.join(src, name), os.path.join(dst, name))
+        shutil.rmtree(src, ignore_errors=True)
+    else:
+        os.replace(src, dst)
+    # durable 'latest' pointer
+    tmp = os.path.join(root, LATEST + ".tmp")
+    with open(tmp, "w") as f:
+        f.write(str(ckpt_id))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(root, LATEST))
+    prune(root, keep_last)
+    return dst
+
+
+def abort(root: str, ckpt_id: int) -> None:
+    src = ckpt_dir(root, ckpt_id, tmp=True)
+    if os.path.isdir(src):
+        shutil.rmtree(src)
+
+
+def list_committed(root: str) -> List[int]:
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for n in os.listdir(root):
+        if n.startswith("ckpt-") and not n.endswith(".tmp"):
+            if os.path.exists(os.path.join(root, n, MANIFEST)):
+                try:
+                    out.append(int(n[5:]))
+                except ValueError:
+                    pass
+    return sorted(out)
+
+
+def latest_id(root: str) -> Optional[int]:
+    """Newest committed id — trusts ``latest`` but falls back to scanning
+    (the pointer write could be lost in a crash; the data is still there)."""
+    ids = list_committed(root)
+    if not ids:
+        return None
+    p = os.path.join(root, LATEST)
+    if os.path.exists(p):
+        try:
+            cand = int(open(p).read().strip())
+            if cand in ids:
+                return cand
+        except ValueError:
+            pass
+    return ids[-1]
+
+
+def read_manifest(root: str, ckpt_id: int) -> Dict[str, Any]:
+    with open(os.path.join(ckpt_dir(root, ckpt_id), MANIFEST)) as f:
+        return json.load(f)
+
+
+def prune(root: str, keep_last: int) -> None:
+    ids = list_committed(root)
+    for i in ids[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(ckpt_dir(root, i), ignore_errors=True)

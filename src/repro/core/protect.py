@@ -1,0 +1,94 @@
+"""Protection registry: pytree ⇄ named arrays + path selectors.
+
+This is the layer that replaces the paper's compiler work (DESIGN.md §2):
+Mercurium extracts base address / size / bounds from program symbols; here
+pytree flattening extracts (path, dtype, shape, sharding) from the state the
+user names. The user writes ``ctx.store(state, ...)`` — nothing is
+hand-serialized.
+
+Selectors are the analogue of *self-iterative data expressions* (§5.2):
+``"params/groups/*/attn/**"`` expands over the tree exactly like
+``{data[i], i=0;4}`` expands over an array.
+"""
+from __future__ import annotations
+
+import fnmatch
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.tree_util import (
+    tree_flatten_with_path,
+    tree_unflatten,
+    keystr,
+)
+
+
+def _path_str(path) -> str:
+    """KeyPath → canonical slash path: ('params','groups',0,'attn','wq') →
+    "params/groups/0/attn/wq"."""
+    parts = []
+    for k in path:
+        s = keystr((k,))
+        s = s.strip("[]'\".")
+        parts.append(s)
+    return "/".join(parts)
+
+
+def flatten_named(tree: Any) -> Tuple[Dict[str, Any], Any]:
+    """→ ({path: leaf}, treedef). Paths are stable across runs (dict order
+    canonicalized by jax pytree registry)."""
+    leaves, treedef = tree_flatten_with_path(tree)
+    named = {}
+    for path, leaf in leaves:
+        p = _path_str(path)
+        if p in named:
+            raise ValueError(f"duplicate pytree path {p!r}")
+        named[p] = leaf
+    return named, treedef
+
+
+def unflatten_named(treedef, named: Dict[str, Any], template: Any) -> Any:
+    """Rebuild a tree shaped like ``template`` from named leaves (match by
+    path; order-free — unlike the paper's order-critical load/store lists)."""
+    t_leaves, t_def = tree_flatten_with_path(template)
+    out = []
+    for path, leaf in t_leaves:
+        p = _path_str(path)
+        if p not in named:
+            raise KeyError(f"checkpoint missing leaf {p!r}")
+        out.append(named[p])
+    return tree_unflatten(t_def, out)
+
+
+def select(named: Dict[str, Any], patterns: Optional[List[str]]) -> Dict[str, Any]:
+    """Glob-select protected leaves. ``None`` → everything. ``**`` crosses
+    slashes; ``*`` does not."""
+    if not patterns:
+        return dict(named)
+    out: Dict[str, Any] = {}
+    regexes = []
+    for pat in patterns:
+        esc = re.escape(pat)
+        esc = esc.replace(r"\*\*", ".*").replace(r"\*", "[^/]*")
+        regexes.append(re.compile("^" + esc + "$"))
+    for path, leaf in named.items():
+        if any(r.match(path) for r in regexes):
+            out[path] = leaf
+    if not out:
+        raise ValueError(f"selectors {patterns} matched no leaves")
+    return out
+
+
+def to_host(named: Dict[str, Any]) -> Dict[str, np.ndarray]:
+    """Device→host snapshot of every protected leaf (one fused transfer)."""
+    arrs = jax.device_get(list(named.values()))
+    return {k: np.asarray(v) for k, v in zip(named.keys(), arrs)}
+
+
+def leaf_meta(named: Dict[str, Any]) -> Dict[str, Dict]:
+    out = {}
+    for k, v in named.items():
+        out[k] = {"dtype": np.dtype(v.dtype).str, "shape": list(v.shape)}
+    return out

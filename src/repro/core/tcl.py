@@ -1,0 +1,74 @@
+"""TCL — the Transparent Checkpoint Library layer (paper §5.3).
+
+TCL sits between the directives (context.py) and the backends: it owns
+serialization (pytree ⇄ named host arrays — the work Mercurium + TCL share
+in the paper), forwards requests to the selected backend in the backend's
+native call protocol, and performs transparent restart detection.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.backends.base import Backend
+from repro.backends.registry import make_backend
+from repro.core.comm import Communicator
+from repro.core.protect import flatten_named, select, to_host, unflatten_named
+from repro.core.storage import CHK_FULL, StorageConfig, StoreReport
+
+
+class TCL:
+    def __init__(self, cfg: StorageConfig, comm: Communicator,
+                 backend: Optional[str] = None, **backend_kw):
+        self.backend: Backend = make_backend(cfg, comm, backend, **backend_kw)
+        self.comm = comm
+
+    # ------------------------------------------------------------------ #
+
+    def store(self, tree: Any, ckpt_id: int, level: int, kind: str = CHK_FULL,
+              selectors: Optional[List[str]] = None) -> Optional[StoreReport]:
+        """Serialize the (selected) tree and forward to the backend.
+
+        The device→host snapshot happens here, synchronously — everything
+        after (hashing already done on device for DIFF, redundancy, I/O) is
+        the backend's business and may be asynchronous.
+        """
+        named_dev = select(flatten_named(tree)[0], selectors)
+        named_host = to_host(named_dev)
+        return self.backend.tcl_store(named_host, ckpt_id, level, kind)
+
+    def load(self, template: Any,
+             selectors: Optional[List[str]] = None) -> Optional[Any]:
+        """Transparent restart: returns a tree shaped like ``template`` with
+        restored leaves, or None when no checkpoint exists."""
+        named_t, treedef = flatten_named(template)
+        chosen = select(named_t, selectors)
+        restored = self.backend.tcl_load()
+        if restored is None:
+            return None
+        merged: Dict[str, Any] = {}
+        for path, leaf in named_t.items():
+            if path in chosen:
+                if path not in restored:
+                    raise KeyError(f"checkpoint missing protected leaf {path!r}")
+                arr = restored[path]
+                if list(arr.shape) != list(leaf.shape):
+                    raise ValueError(
+                        f"{path}: checkpoint shape {arr.shape} != "
+                        f"template {leaf.shape} (use elastic restore)")
+                if arr.dtype != np.dtype(leaf.dtype):
+                    raise TypeError(
+                        f"{path}: checkpoint dtype {arr.dtype} != "
+                        f"template {leaf.dtype}")
+                merged[path] = jax.device_put(arr)
+            else:
+                merged[path] = leaf
+        return unflatten_named(treedef, merged, template)
+
+    def wait(self) -> None:
+        self.backend.tcl_wait()
+
+    def finalize(self) -> None:
+        self.backend.tcl_finalize()

@@ -1,0 +1,1 @@
+"""Fault tolerance: injection, detection, elastic rescale, stragglers."""

@@ -1,0 +1,47 @@
+"""Heartbeat failure detector for the restart launcher.
+
+The training process touches a heartbeat file every step; the launcher
+watches mtime and declares the worker dead after ``timeout`` seconds —
+covering hangs, not just aborts (aborts are caught by exit status).
+At 1000+ nodes the same protocol runs per-host with the launcher feeding a
+cluster-level scheduler; the file-based local form keeps the logic testable.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+
+@dataclass
+class Heartbeat:
+    path: str
+
+    def beat(self, step: Optional[int] = None) -> None:
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(f"{time.time()} {step if step is not None else -1}")
+        os.replace(tmp, self.path)
+
+    def last(self) -> Optional[float]:
+        try:
+            return float(open(self.path).read().split()[0])
+        except (OSError, ValueError, IndexError):
+            return None
+
+    def last_step(self) -> Optional[int]:
+        try:
+            return int(open(self.path).read().split()[1])
+        except (OSError, ValueError, IndexError):
+            return None
+
+
+@dataclass
+class HeartbeatMonitor:
+    hb: Heartbeat
+    timeout: float = 60.0
+
+    def alive(self) -> bool:
+        t = self.hb.last()
+        return t is not None and (time.time() - t) < self.timeout

@@ -1,0 +1,62 @@
+"""Straggler mitigation for coordinated checkpoints.
+
+Two mechanisms (DESIGN.md §4):
+
+1. **CP-dedicated threads** (core/async_engine.py) keep slow I/O off the
+   step path entirely — a slow disk delays the *next* checkpoint, not the
+   training step.
+2. **Quorum commit**: an L2 checkpoint is restorable when, for every rank,
+   either its own payload or its partner's replica exists. The commit
+   validator below implements that rule, so a straggler (or dead) writer
+   does not block the commit — its partner's copy covers it.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import manifest as mf
+from repro.redundancy.groups import Topology
+
+
+@dataclass
+class QuorumReport:
+    restorable: bool
+    present: List[int]
+    covered_by_partner: List[int]
+    lost: List[int]
+
+
+def validate_quorum(ckpt_dir_path: str, topo: Topology) -> QuorumReport:
+    """Is this (possibly incomplete) checkpoint restorable for all ranks?"""
+    present, covered, lost = [], [], []
+    for r in range(topo.world):
+        own = os.path.join(ckpt_dir_path, f"rank{r}.chk5")
+        if os.path.exists(own):
+            present.append(r)
+            continue
+        holder = topo.partner_of(r)
+        rep = os.path.join(ckpt_dir_path, f"rank{holder}.partner{r}.chk5")
+        if os.path.exists(rep):
+            covered.append(r)
+        else:
+            lost.append(r)
+    return QuorumReport(not lost, present, covered, lost)
+
+
+def commit_if_quorum(root: str, ckpt_id: int, topo: Topology,
+                     extra_meta: Optional[dict] = None) -> bool:
+    """Commit a .tmp checkpoint when the quorum rule holds (straggler-safe
+    commit path used by the training loop's watchdog)."""
+    d = mf.ckpt_dir(root, ckpt_id, tmp=True)
+    if not os.path.isdir(d):
+        return False
+    rep = validate_quorum(d, topo)
+    if not rep.restorable:
+        return False
+    mf.write_manifest(root, ckpt_id, dict(
+        extra_meta or {}, kind="FULL", level=2, world=topo.world,
+        quorum={"present": rep.present, "partner": rep.covered_by_partner}))
+    mf.commit(root, ckpt_id)
+    return True

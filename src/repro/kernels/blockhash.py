@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: per-block checkpoint hashing at HBM bandwidth.
+
+The paper's differential checkpointing (FTI dCP) hashes protected data in
+blocks on the host CPU. On TPU that would mean DMA-ing *all* bytes to the
+host first — defeating the point. This kernel computes the dirty-map on
+device: protected arrays are viewed as (n_blocks, block_elems) uint32 and
+hashed in VMEM tiles; only the (tiny) hash vector and the dirty blocks ever
+cross the PCIe boundary (DESIGN.md §2, hardware adaptation).
+
+Tiling: grid (n_blocks / BR, block_elems / BE); the elems axis is
+"arbitrary" (sequential) and accumulates into the output block with a
+wrapping-add fold, which matches the commutative oracle in ref.py exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import HASH_SALT_A, HASH_SALT_B
+
+BR = 8          # block rows per tile
+BE = 2048       # elems per tile (8·2048·4B = 64 KiB VMEM per input tile)
+
+
+def _hash_kernel(x_ref, out_ref, *, salt: np.uint32, be: int):
+    j = pl.program_id(1)
+    x = x_ref[...].astype(jnp.uint32)                      # (BR, BE)
+    base = (j * np.uint32(be)).astype(jnp.uint32)
+    idx = (base + jax.lax.broadcasted_iota(jnp.uint32, x.shape, 1)) * salt
+    h = x ^ idx
+    h = h ^ (h >> 16)
+    h = h * np.uint32(0x7FEB352D)
+    h = h ^ (h >> 15)
+    h = h * np.uint32(0x846CA68B)
+    h = h ^ (h >> 16)
+    partial = jnp.sum(h, axis=1, dtype=jnp.uint32)         # (BR,)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+def blockhash_pallas(blocks_u32: jnp.ndarray, salt: np.uint32 = HASH_SALT_A,
+                     interpret: bool = False) -> jnp.ndarray:
+    """(n_blocks, elems) uint32 → (n_blocks,) uint32. elems % BE == 0 and
+    n_blocks % BR == 0 (ops.py pads)."""
+    n, e = blocks_u32.shape
+    assert n % BR == 0 and e % BE == 0, (n, e)
+    grid = (n // BR, e // BE)
+    return pl.pallas_call(
+        functools.partial(_hash_kernel, salt=salt, be=BE),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BR, BE), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((BR,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(blocks_u32)
+
+
+def blockhash2_pallas(blocks_u32: jnp.ndarray, interpret: bool = False
+                      ) -> jnp.ndarray:
+    """Two salt lanes → (n_blocks, 2) uint32 (64-bit digest)."""
+    a = blockhash_pallas(blocks_u32, HASH_SALT_A, interpret=interpret)
+    b = blockhash_pallas(blocks_u32, HASH_SALT_B, interpret=interpret)
+    return jnp.stack([a, b], axis=1)

@@ -1,0 +1,70 @@
+"""Pallas TPU kernels: dirty-block compaction (gather) and restore (scatter).
+
+After the dirty-map is computed on device (blockhash.py), the dirty blocks
+are packed into a contiguous buffer so a *single* dense DMA ships them to
+the host — instead of n_dirty strided host reads. The block indices arrive
+via scalar prefetch (``PrefetchScalarGridSpec``), the canonical TPU pattern
+for data-dependent addressing: the index vector lands in SMEM before the
+grid runs, and each grid step's BlockSpec index_map reads it to choose the
+HBM tile to bring into VMEM.
+
+``diffunpack`` is the inverse (restore path): scatter packed blocks back
+into the base buffer (aliased in-place via input_output_aliases).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(idx_ref, src_ref, dst_ref):
+    dst_ref[...] = src_ref[...]
+
+
+def diffpack_pallas(blocks: jnp.ndarray, dirty_idx: jnp.ndarray,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Gather: (n_blocks, e) × (n_dirty,) int32 → (n_dirty, e)."""
+    n_dirty = dirty_idx.shape[0]
+    e = blocks.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_dirty,),
+        in_specs=[pl.BlockSpec((1, e), lambda i, idx_ref: (idx_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, e), lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_dirty, e), blocks.dtype),
+        interpret=interpret,
+    )(dirty_idx, blocks)
+
+
+def _scatter_kernel(idx_ref, packed_ref, base_ref, out_ref):
+    # base is aliased to out; each step overwrites one block row
+    out_ref[...] = packed_ref[...]
+
+
+def diffunpack_pallas(base: jnp.ndarray, packed: jnp.ndarray,
+                      dirty_idx: jnp.ndarray, interpret: bool = False
+                      ) -> jnp.ndarray:
+    """Scatter: write packed rows back at dirty_idx. Returns updated base."""
+    n_dirty, e = packed.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_dirty,),
+        in_specs=[
+            pl.BlockSpec((1, e), lambda i, idx_ref: (i, 0)),            # packed
+            pl.BlockSpec((1, e), lambda i, idx_ref: (idx_ref[i], 0)),   # base
+        ],
+        out_specs=pl.BlockSpec((1, e), lambda i, idx_ref: (idx_ref[i], 0)),
+    )
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(base.shape, base.dtype),
+        input_output_aliases={2: 0},    # alias base → out (in-place)
+        interpret=interpret,
+    )(dirty_idx, packed, base)

@@ -1,0 +1,93 @@
+"""Jit'd public wrappers for the checkpoint kernels.
+
+Dispatch: Pallas kernels on TPU; vectorized jnp oracle (ref.py) on CPU —
+so the diff engine runs everywhere, and tests can force the Pallas path in
+``interpret=True`` mode to validate the kernels bit-exactly against ref.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import blockhash as bh
+from repro.kernels import diffpack as dp
+from repro.kernels import ref
+
+DEFAULT_BLOCK_BYTES = 65_536      # 64 KiB — FTI dCP-scale block granularity
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def as_u32_blocks(x: jnp.ndarray, block_bytes: int = DEFAULT_BLOCK_BYTES
+                  ) -> Tuple[jnp.ndarray, int]:
+    """Bitcast any array to (n_blocks, block_elems) uint32, zero-padded.
+    Returns (blocks, n_blocks). Pads so the Pallas tile grid divides evenly."""
+    assert block_bytes % 4 == 0
+    be = block_bytes // 4
+    flat = x.reshape(-1)
+    itemsize = jnp.dtype(flat.dtype).itemsize
+    if itemsize == 2:
+        # bit-PACK pairs into u32 (little-endian, raw-byte-consistent with
+        # numpy .tobytes() — required so diff payloads replay into raw
+        # byte buffers on restore)
+        u16 = jax.lax.bitcast_convert_type(flat, jnp.uint16)
+        pad = (-u16.shape[0]) % 2
+        u16 = jnp.pad(u16, (0, pad))
+        flat = jax.lax.bitcast_convert_type(u16.reshape(-1, 2), jnp.uint32)
+    elif itemsize == 4:
+        flat = jax.lax.bitcast_convert_type(flat, jnp.uint32)
+    elif itemsize == 8:
+        flat = jax.lax.bitcast_convert_type(
+            flat.reshape(-1, 1), jnp.uint32).reshape(-1)
+    elif itemsize == 1:
+        u8 = jax.lax.bitcast_convert_type(flat, jnp.uint8) \
+            if flat.dtype != jnp.uint8 else flat
+        pad = (-u8.shape[0]) % 4
+        u8 = jnp.pad(u8, (0, pad))
+        flat = jax.lax.bitcast_convert_type(u8.reshape(-1, 4), jnp.uint32)
+    else:
+        raise TypeError(f"unsupported dtype {x.dtype}")
+    n = flat.shape[0]
+    n_blocks = max(1, -(-n // be))
+    pad_rows = (-n_blocks) % bh.BR if _use_pallas() else 0
+    total = (n_blocks + pad_rows) * be
+    flat = jnp.pad(flat, (0, total - n))
+    return flat.reshape(n_blocks + pad_rows, be), n_blocks
+
+
+@functools.partial(jax.jit, static_argnames=("block_bytes",))
+def blockhash(x: jnp.ndarray, block_bytes: int = DEFAULT_BLOCK_BYTES
+              ) -> jnp.ndarray:
+    """Array → (n_blocks, 2) uint32 digest (64-bit per block)."""
+    blocks, n_blocks = as_u32_blocks(x, block_bytes)
+    if _use_pallas() and blocks.shape[1] % bh.BE == 0:
+        h = bh.blockhash2_pallas(blocks)
+    else:
+        h = ref.blockhash2_ref(blocks)
+    return h[:n_blocks]
+
+
+@functools.partial(jax.jit, static_argnames=("block_bytes", "n_dirty"))
+def pack_dirty(x: jnp.ndarray, dirty_idx: jnp.ndarray, n_dirty: int,
+               block_bytes: int = DEFAULT_BLOCK_BYTES) -> jnp.ndarray:
+    """Gather ``n_dirty`` blocks (static count — pad idx with 0s and slice
+    host-side) → (n_dirty, block_elems) uint32."""
+    blocks, _ = as_u32_blocks(x, block_bytes)
+    idx = dirty_idx[:n_dirty]
+    if _use_pallas():
+        return dp.diffpack_pallas(blocks, idx)
+    return ref.diffpack_ref(blocks, idx)
+
+
+def dirty_indices(h_new: np.ndarray, h_old: Optional[np.ndarray]) -> np.ndarray:
+    """Host-side dirty map: blocks whose 64-bit digest changed."""
+    if h_old is None:
+        return np.arange(h_new.shape[0], dtype=np.int32)
+    neq = np.any(np.asarray(h_new) != np.asarray(h_old), axis=1)
+    return np.nonzero(neq)[0].astype(np.int32)

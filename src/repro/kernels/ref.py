@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the checkpoint kernels (and the CPU execution path).
+
+The hash is a position-salted multiply–xorshift mix (murmur3-finalizer
+family) folded with wrapping uint32 addition — commutative, so the Pallas
+kernel can tree-reduce/tile-accumulate in any order and still match this
+oracle bit-exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+HASH_SALT_A = np.uint32(0x9E3779B9)   # golden-ratio odd constants
+HASH_SALT_B = np.uint32(0x85EBCA6B)
+
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 fmix32 — bijective avalanche over uint32."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * np.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * np.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def blockhash_ref(blocks_u32: jnp.ndarray, salt: np.uint32 = HASH_SALT_A
+                  ) -> jnp.ndarray:
+    """(n_blocks, elems) uint32 → (n_blocks,) uint32 per-block hash.
+
+    hash(b) = Σ_i mix32(x[b,i] ⊕ (i·salt))  (wrapping add — commutative).
+    """
+    n, e = blocks_u32.shape
+    idx = (jnp.arange(e, dtype=jnp.uint32) * salt)[None, :]
+    return jnp.sum(mix32(blocks_u32.astype(jnp.uint32) ^ idx),
+                   axis=1, dtype=jnp.uint32)
+
+
+def blockhash2_ref(blocks_u32: jnp.ndarray) -> jnp.ndarray:
+    """Two independent 32-bit lanes → (n_blocks, 2) uint32 (64-bit digest)."""
+    return jnp.stack(
+        [blockhash_ref(blocks_u32, HASH_SALT_A),
+         blockhash_ref(blocks_u32, HASH_SALT_B)], axis=1)
+
+
+def diffpack_ref(blocks: jnp.ndarray, dirty_idx: jnp.ndarray) -> jnp.ndarray:
+    """Gather dirty blocks: (n_blocks, e), (n_dirty,) → (n_dirty, e)."""
+    return jnp.take(blocks, dirty_idx, axis=0)
+
+
+def diffunpack_ref(base: jnp.ndarray, packed: jnp.ndarray,
+                   dirty_idx: jnp.ndarray) -> jnp.ndarray:
+    """Scatter packed blocks into base: inverse of diffpack."""
+    return base.at[dirty_idx].set(packed)

@@ -1,0 +1,137 @@
+"""End-to-end training driver with OpenCHK checkpoint/restart.
+
+Modes:
+  direct:      python -m repro.launch.train --arch tinyllama-1.1b --steps 200
+  supervised:  python -m repro.launch.train --supervise --inject-at 0.9 ...
+               (launcher spawns the worker, injects a fault at 90 % progress,
+               detects death via exit code / heartbeat timeout, restarts; the
+               worker resumes from the last checkpoint via ``ctx.load`` — the
+               paper's §6.1 methodology end to end)
+
+Reduced configs run on CPU; ``--full`` uses the assigned config (TPU-scale).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+
+def worker(args) -> int:
+    import jax
+    from repro.configs import get_arch
+    from repro.core.context import CheckpointConfig, CheckpointContext
+    from repro.data.synthetic import init_data_state
+    from repro.ft.failures import FaultInjector, should_inject_from_env
+    from repro.models.zoo import build_model
+    from repro.train.loop import LevelSchedule, LoopConfig, run_training
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.state import init_train_state
+    from repro.train.step import make_train_step
+
+    cfg = get_arch(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    state = init_train_state(params, jax.random.PRNGKey(args.seed + 1),
+                             init_data_state(args.seed))
+    step_fn = make_train_step(
+        model, AdamWConfig(total_steps=args.steps, warmup_steps=args.steps // 10),
+        remat=not args.no_remat, num_microbatches=args.microbatches)
+
+    ckpt = CheckpointContext(CheckpointConfig(
+        dir=args.ckpt_dir, backend=args.backend,
+        dedicated_thread=not args.no_dedicated_thread))
+
+    inject_at = args.inject_at if args.inject_at else should_inject_from_env()
+    injector = FaultInjector(args.steps, inject_at, hard=args.hard_fault) \
+        if inject_at else None
+
+    loop = LoopConfig(
+        total_steps=args.steps,
+        ckpt_every=args.ckpt_every,
+        kind="DIFF" if args.differential else "FULL",
+        levels=LevelSchedule(),
+        heartbeat_path=os.path.join(args.ckpt_dir, "heartbeat"),
+    )
+    try:
+        summary = run_training(model, step_fn, state, ckpt, loop,
+                               args.batch, args.seq, injector=injector)
+    finally:
+        ckpt.shutdown()
+    brief = {k: v for k, v in summary.items() if k != "state"}
+    print(f"[train] done: {brief}")
+    return 0
+
+
+def supervise(args) -> int:
+    """Restart launcher: run worker until success, restarting on failure."""
+    from repro.ft.detector import Heartbeat, HeartbeatMonitor
+
+    cmd = [sys.executable, "-m", "repro.launch.train"] + [
+        a for a in sys.argv[1:] if a not in ("--supervise",)]
+    env = dict(os.environ)
+    if args.inject_at:
+        env["OPENCHK_INJECT_AT"] = str(args.inject_at)
+        cmd = [c for c in cmd if not c.startswith("--inject-at")
+               and c != str(args.inject_at)]
+    hb = Heartbeat(os.path.join(args.ckpt_dir, "heartbeat"))
+    attempts = 0
+    while attempts < args.max_restarts + 1:
+        attempts += 1
+        print(f"[supervisor] attempt {attempts}")
+        p = subprocess.Popen(cmd, env=env)
+        monitor = HeartbeatMonitor(hb, timeout=args.heartbeat_timeout)
+        while True:
+            rc = p.poll()
+            if rc is not None:
+                break
+            time.sleep(1.0)
+            if hb.last() is not None and not monitor.alive():
+                print("[supervisor] heartbeat timeout → killing worker")
+                p.kill()
+                rc = p.wait()
+                break
+        if rc == 0:
+            print(f"[supervisor] success after {attempts} attempt(s)")
+            return 0
+        print(f"[supervisor] worker died rc={rc} "
+              f"(last step {hb.last_step()}); restarting from checkpoint")
+        env.pop("OPENCHK_INJECT_AT", None)     # fault fired; clean restarts
+    print("[supervisor] giving up")
+    return 1
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/openchk-train")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--backend", default=None, help="fti|scr|veloc (or env)")
+    ap.add_argument("--differential", action="store_true")
+    ap.add_argument("--full", action="store_true", help="full (TPU-size) config")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-dedicated-thread", action="store_true")
+    ap.add_argument("--inject-at", type=float, default=None)
+    ap.add_argument("--hard-fault", action="store_true",
+                    help="os._exit instead of exception")
+    ap.add_argument("--supervise", action="store_true")
+    ap.add_argument("--max-restarts", type=int, default=3)
+    ap.add_argument("--heartbeat-timeout", type=float, default=120.0)
+    args = ap.parse_args()
+    os.makedirs(args.ckpt_dir, exist_ok=True)
+    if args.supervise:
+        return supervise(args)
+    return worker(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,413 @@
+"""Attention variants: GQA (+qkv bias), sliding-window, MLA, cross-attention.
+
+Design notes (see DESIGN.md §4):
+- Training/prefill attention scans over query blocks (`lax.scan`) so the
+  materialized score tensor is O(q_block × S) instead of O(S²) — required to
+  fit 32k-token prefill in HBM. Softmax is fp32.
+- Sliding-window attention slices the K/V sequence with a dynamic (but
+  statically-sized) window per query block, so SWA flops are O(S·W) not
+  O(S²) in the compiled HLO.
+- Decode uses in-place cache update (`dynamic_update_slice`); sliding-window
+  decode uses a rolling O(W) cache. MLA decode runs in the *absorbed* form
+  (cache = latents, W_uk folded into the query) — the compressed-KV-cache
+  trick that makes MLA worth its name.
+- Tensors are (batch, seq, heads, head_dim) internally; GQA scores are
+  computed without materializing repeated KV heads.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.context import DATA, MODEL, shard_decode_kv, shard_hint
+from repro.models.layers import apply_rope, dense_init
+
+Params = Dict[str, Any]
+
+_NEG_INF = -1e30
+
+
+def _attn_impl() -> str:
+    """"blockwise" (default) or "flash" (fused Pallas kernel — the §Perf
+    memory-term fix; set REPRO_ATTN_IMPL=flash)."""
+    import os
+    return os.environ.get("REPRO_ATTN_IMPL", "blockwise")
+
+
+def repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(B,S,KV,dh) → (B,S,KV·n_rep,dh). Materializing the repeat lets the
+    head dim shard cleanly on the model axis (MaxText-style GQA TP)."""
+    if n_rep == 1:
+        return k
+    b, s, kv, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None], (b, s, kv, n_rep, dh)).reshape(
+        b, s, kv * n_rep, dh)
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+
+
+def init_gqa(key, cfg: ArchConfig, dtype) -> Params:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * dh, dtype),
+        "wk": dense_init(ks[1], d, kv * dh, dtype),
+        "wv": dense_init(ks[2], d, kv * dh, dtype),
+        "wo": dense_init(ks[3], h * dh, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((kv * dh,), dtype)
+        p["bv"] = jnp.zeros((kv * dh,), dtype)
+    return p
+
+
+def init_mla(key, cfg: ArchConfig, dtype) -> Params:
+    m = cfg.mla
+    assert m is not None
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "w_dq": dense_init(ks[0], d, m.q_lora_rank, dtype),
+        "w_uq": dense_init(ks[1], m.q_lora_rank, h * qk, dtype),
+        "w_dkv": dense_init(ks[2], d, m.kv_lora_rank, dtype),
+        "w_kr": dense_init(ks[3], d, m.qk_rope_dim, dtype),
+        "w_uk": dense_init(ks[4], m.kv_lora_rank, h * m.qk_nope_dim, dtype),
+        "w_uv": dense_init(ks[5], m.kv_lora_rank, h * m.v_head_dim, dtype),
+        "wo": dense_init(ks[6], h * m.v_head_dim, d, dtype),
+    }
+
+
+def init_cross_attn(key, cfg: ArchConfig, dtype) -> Params:
+    return init_gqa(key, cfg, dtype)
+
+
+def init_attention(key, cfg: ArchConfig, dtype) -> Params:
+    if cfg.attn_kind == "mla":
+        return init_mla(key, cfg, dtype)
+    return init_gqa(key, cfg, dtype)
+
+
+# --------------------------------------------------------------------------- #
+# core blockwise attention
+# --------------------------------------------------------------------------- #
+
+
+def _scores_softmax_v(q, k, v, mask, scale):
+    """q:(B,Qb,H,dh) k/v:(B,Sk,H,dh) mask:(Qb,Sk) bool → (B,Qb,H,dh)."""
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask[None, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", probs, v)
+
+
+def blockwise_attention(
+    q: jnp.ndarray,              # (B, S, H, dh)
+    k: jnp.ndarray,              # (B, S, H, dh)  (KV pre-repeated to H)
+    v: jnp.ndarray,              # (B, S, H, dh)
+    *,
+    causal: bool,
+    window: Optional[int] = None,
+    q_block: int = 512,
+) -> jnp.ndarray:
+    """Query-block-scanned attention. O(q_block·Sk) memory per step.
+
+    With ``window`` set, each query block attends only to a dynamically
+    sliced K/V span of length ``window + q_block`` — sub-quadratic SWA.
+    """
+    b, s, h, dh = q.shape
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    qb = min(q_block, s)
+    n_blocks = s // qb
+    assert s % qb == 0, f"seq {s} not divisible by q_block {qb}"
+
+    use_window = window is not None and causal and (window + qb) < s
+    span = (window + qb) if use_window else s
+
+    q_blocks = q.reshape(b, n_blocks, qb, h, dh)
+
+    def body(_, i):
+        qi = q_blocks[:, i]                     # (B, qb, H, dh)
+        q_start = i * qb
+        if use_window:
+            k_start = jnp.clip(q_start + qb - span, 0, s - span)
+            ki = jax.lax.dynamic_slice_in_dim(k, k_start, span, axis=1)
+            vi = jax.lax.dynamic_slice_in_dim(v, k_start, span, axis=1)
+            k_pos = k_start + jnp.arange(span)
+        else:
+            ki, vi = k, v
+            k_pos = jnp.arange(s)
+        q_pos = q_start + jnp.arange(qb)
+        if causal:
+            mask = k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask &= k_pos[None, :] > (q_pos[:, None] - window)
+        else:
+            mask = jnp.ones((qb, k_pos.shape[0]), dtype=bool)
+        return None, _scores_softmax_v(qi, ki, vi, mask, scale)
+
+    _, out = jax.lax.scan(body, None, jnp.arange(n_blocks))
+    # out: (n_blocks, B, qb, H, dv) → (B, S, H, dv); dv may differ from dh (MLA)
+    dv = v.shape[-1]
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dv)
+
+
+# --------------------------------------------------------------------------- #
+# GQA full layer (train/prefill)
+# --------------------------------------------------------------------------- #
+
+
+def gqa_attention(
+    p: Params,
+    x: jnp.ndarray,              # (B, S, d)
+    cfg: ArchConfig,
+    *,
+    causal: bool = True,
+    positions: Optional[jnp.ndarray] = None,
+    use_rope: Optional[bool] = None,             # default: cfg.use_rope
+    kv_override: Optional[jnp.ndarray] = None,   # cross-attn: encoder states
+) -> jnp.ndarray:
+    b, s, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = kv_override if kv_override is not None else x
+    sk = src.shape[1]
+
+    q = x @ p["wq"]
+    k = src @ p["wk"]
+    v = src @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, sk, kv, dh)
+    v = v.reshape(b, sk, kv, dh)
+
+    if use_rope is None:
+        use_rope = cfg.use_rope
+    if use_rope and kv_override is None:
+        pos = positions if positions is not None else jnp.arange(s)[None, :]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+
+    k = repeat_kv(k, h // kv)
+    v = repeat_kv(v, h // kv)
+    q = shard_hint(q, DATA, None, MODEL, None)
+    k = shard_hint(k, DATA, None, MODEL, None)
+    v = shard_hint(v, DATA, None, MODEL, None)
+
+    is_causal = causal and kv_override is None
+    if _attn_impl() == "flash" and cfg.sliding_window is None:
+        from repro.kernels.flashattn import flash_attention_bshd
+        out = flash_attention_bshd(
+            q, k, v, causal=is_causal,
+            interpret=jax.default_backend() != "tpu")
+    else:
+        out = blockwise_attention(
+            q, k, v, causal=is_causal, window=cfg.sliding_window)
+    return out.reshape(b, s, h * dh) @ p["wo"]
+
+
+# --------------------------------------------------------------------------- #
+# GQA decode (one step, KV cache)
+# --------------------------------------------------------------------------- #
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray               # (B, C, KV, dh)  C = max_len or window
+    v: jnp.ndarray
+
+    def is_windowed(self, cfg: ArchConfig) -> bool:
+        """Rolling cache iff allocated at exactly the sliding window size."""
+        return cfg.sliding_window is not None and self.k.shape[1] == cfg.sliding_window
+
+
+def init_kv_cache(batch: int, cfg: ArchConfig, max_len: int, dtype) -> KVCache:
+    w = cfg.sliding_window
+    c = w if (w is not None and w < max_len) else max_len
+    shape = (batch, c, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def gqa_decode(
+    p: Params,
+    x: jnp.ndarray,              # (B, 1, d)
+    cache: KVCache,
+    pos,                         # scalar int32 — current position
+    cfg: ArchConfig,
+    *,
+    kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, KVCache]:
+    b = x.shape[0]
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(b, 1, h, dh)
+    pos_b = jnp.full((b, 1), pos)
+    if cfg.use_rope:
+        q = apply_rope(q, pos_b, cfg.rope_theta)
+
+    if kv_override is not None:                   # cross-attn: static cache
+        ck, cv = kv_override
+        mask = jnp.ones((ck.shape[1],), dtype=bool)
+    else:
+        knew = x @ p["wk"]
+        vnew = x @ p["wv"]
+        if cfg.qkv_bias:
+            knew = knew + p["bk"]
+            vnew = vnew + p["bv"]
+        knew = knew.reshape(b, 1, kvh, dh)
+        if cfg.use_rope:
+            knew = apply_rope(knew, pos_b, cfg.rope_theta)
+        vnew = vnew.reshape(b, 1, kvh, dh)
+        c = cache.k.shape[1]
+        windowed = cache.is_windowed(cfg)
+        slot = jax.lax.rem(pos, c) if windowed else pos
+        ck = jax.lax.dynamic_update_slice_in_dim(cache.k, knew, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache.v, vnew, slot, axis=1)
+        cache = KVCache(ck, cv)
+        idx = jnp.arange(c)
+        if windowed:
+            mask = (idx <= pos) | (pos >= c)      # all slots valid once wrapped
+        else:
+            mask = idx <= pos
+
+    kr = shard_decode_kv(repeat_kv(ck, h // ck.shape[2]))
+    vr = shard_decode_kv(repeat_kv(cv, h // cv.shape[2]))
+    scores = jnp.einsum("bhd,bshd->bhs", q[:, 0], kr).astype(jnp.float32) * scale
+    scores = jnp.where(mask[None, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(vr.dtype)
+    out = jnp.einsum("bhs,bshd->bhd", probs, vr).reshape(b, 1, h * dh)
+    return out @ p["wo"], cache
+
+
+# --------------------------------------------------------------------------- #
+# MLA (Multi-head Latent Attention)
+# --------------------------------------------------------------------------- #
+
+
+def mla_attention(
+    p: Params,
+    x: jnp.ndarray,              # (B, S, d)
+    cfg: ArchConfig,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Training/prefill MLA in the naive (materialized K/V) form."""
+    m = cfg.mla
+    assert m is not None
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    pos = positions if positions is not None else jnp.arange(s)[None, :]
+
+    q = (x @ p["w_dq"]) @ p["w_uq"]
+    q = q.reshape(b, s, h, qk)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+
+    c_kv = x @ p["w_dkv"]                                   # (B,S,r)
+    k_rope = apply_rope(
+        (x @ p["w_kr"]).reshape(b, s, 1, m.qk_rope_dim), pos, cfg.rope_theta)
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, m.qk_nope_dim)
+    vv = (c_kv @ p["w_uv"]).reshape(b, s, h, m.v_head_dim)
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, m.qk_rope_dim))], axis=-1)
+    out = blockwise_attention(q_full, k_full, vv, causal=True)
+    return out.reshape(b, s, h * m.v_head_dim) @ p["wo"]
+
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray            # (B, C, r)       latent cache
+    k_rope: jnp.ndarray          # (B, C, rope_dim)
+
+
+def init_mla_cache(batch: int, cfg: ArchConfig, max_len: int, dtype) -> MLACache:
+    m = cfg.mla
+    assert m is not None
+    return MLACache(
+        jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        jnp.zeros((batch, max_len, m.qk_rope_dim), dtype),
+    )
+
+
+def mla_decode(
+    p: Params,
+    x: jnp.ndarray,              # (B, 1, d)
+    cache: MLACache,
+    pos,
+    cfg: ArchConfig,
+) -> Tuple[jnp.ndarray, MLACache]:
+    """Absorbed-form MLA decode: attend over latents; W_uk folded into q."""
+    m = cfg.mla
+    assert m is not None
+    b = x.shape[0]
+    h = cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    scale = 1.0 / jnp.sqrt(qk).astype(jnp.float32)
+    pos_b = jnp.full((b, 1), pos)
+
+    q = ((x @ p["w_dq"]) @ p["w_uq"]).reshape(b, 1, h, qk)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, pos_b, cfg.rope_theta)
+    # fold W_uk: q_abs[h, r] = q_nope[h, n] · W_uk[r, h, n]
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], w_uk)   # (B,H,r)
+
+    c_new = (x @ p["w_dkv"])                                 # (B,1,r)
+    kr_new = apply_rope(
+        (x @ p["w_kr"]).reshape(b, 1, 1, m.qk_rope_dim), pos_b, cfg.rope_theta
+    ).reshape(b, 1, m.qk_rope_dim)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache.c_kv, c_new, pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache.k_rope, kr_new, pos, axis=1)
+    cache = MLACache(c_kv, k_rope)
+
+    c_kv_s = shard_decode_kv(c_kv, model_dim=None)
+    k_rope_s = shard_decode_kv(k_rope, model_dim=None)
+    sc = jnp.einsum("bhr,bsr->bhs", q_abs, c_kv_s)
+    sc = sc + jnp.einsum("bhe,bse->bhs", q_rope[:, 0], k_rope_s)
+    sc = sc.astype(jnp.float32) * scale
+    mask = jnp.arange(c_kv.shape[1]) <= pos
+    sc = jnp.where(mask[None, None], sc, _NEG_INF)
+    probs = jax.nn.softmax(sc, axis=-1).astype(c_kv.dtype)
+    o_lat = jnp.einsum("bhs,bsr->bhr", probs, c_kv_s)        # (B,H,r)
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv).reshape(b, 1, h * m.v_head_dim)
+    return o @ p["wo"], cache
+
+
+# --------------------------------------------------------------------------- #
+# dispatch helpers
+# --------------------------------------------------------------------------- #
+
+
+def attention(p, x, cfg: ArchConfig, **kw):
+    if cfg.attn_kind == "mla":
+        kw.pop("causal", None)
+        kw.pop("use_rope", None)
+        return mla_attention(p, x, cfg, **kw)
+    return gqa_attention(p, x, cfg, **kw)
+
+
+def init_decode_cache(batch: int, cfg: ArchConfig, max_len: int, dtype):
+    if cfg.attn_kind == "mla":
+        return init_mla_cache(batch, cfg, max_len, dtype)
+    return init_kv_cache(batch, cfg, max_len, dtype)
+
+
+def attention_decode(p, x, cache, pos, cfg: ArchConfig):
+    if cfg.attn_kind == "mla":
+        return mla_decode(p, x, cache, pos, cfg)
+    return gqa_decode(p, x, cache, pos, cfg)

@@ -1,0 +1,209 @@
+"""Whisper-style encoder-decoder transformer.
+
+The audio conv frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings (B, T_enc, d_model). Sinusoidal positions are
+added (whisper uses fixed sinusoidal for the encoder, learned for the
+decoder — we use sinusoidal for both; stub-equivalent). No RoPE.
+
+Decode: self-attn KV cache grows with generated tokens; cross-attn K/V are
+computed once from the encoder output and static thereafter.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.context import DATA, shard_hint
+from repro.models import attention as attn
+from repro.models.layers import (
+    cast_floating,
+    embed_init,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    rmsnorm,
+)
+
+Params = Dict[str, Any]
+
+
+def sinusoidal_positions(seq: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+def _init_enc_layer(key, cfg: ArchConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn.init_gqa(k1, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg: ArchConfig, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "self_attn": attn.init_gqa(k1, cfg, dtype),
+        "ln_x": init_rmsnorm(cfg.d_model, dtype),
+        "cross_attn": attn.init_cross_attn(k2, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_encdec(key, cfg: ArchConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(
+        jax.random.split(ks[0], cfg.n_layers))
+    dec = jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(
+        jax.random.split(ks[1], cfg.n_layers))
+    return {
+        "embed": embed_init(ks[2], cfg.vocab_size, cfg.d_model, dtype),
+        "enc_layers": enc,
+        "dec_layers": dec,
+        "ln_enc": init_rmsnorm(cfg.d_model, dtype),
+        "ln_f": init_rmsnorm(cfg.d_model, dtype),
+    }
+
+
+def encdec_param_struct(cfg: ArchConfig) -> Any:
+    return jax.eval_shape(functools.partial(init_encdec, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+def encode(params: Params, frames: jnp.ndarray, cfg: ArchConfig,
+           remat: bool = False) -> jnp.ndarray:
+    """frames (B, T, d) stub frontend output → encoder states (B, T, d)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    t, d = frames.shape[1], cfg.d_model
+    h = frames.astype(cdt) + sinusoidal_positions(t, d).astype(cdt)[None]
+    h = shard_hint(h, DATA, None, None)
+
+    def body(h, p):
+        h = h + attn.gqa_attention(
+            p["attn"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg,
+            causal=False, use_rope=False)
+        h = h + mlp(p["mlp"], rmsnorm(p["ln2"], h, cfg.norm_eps), cfg.act)
+        return h, None
+
+    body = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return rmsnorm(params["ln_enc"], h, cfg.norm_eps)
+
+
+def decode_train(params: Params, tokens: jnp.ndarray, enc_out: jnp.ndarray,
+                 cfg: ArchConfig, remat: bool = False) -> jnp.ndarray:
+    """Teacher-forced decoder pass → logits (B, S, V)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    s, d = tokens.shape[1], cfg.d_model
+    h = params["embed"][tokens].astype(cdt)
+    h = h + sinusoidal_positions(s, d).astype(cdt)[None]
+    h = shard_hint(h, DATA, None, None)
+
+    def body(h, p):
+        h = h + attn.gqa_attention(
+            p["self_attn"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg,
+            causal=True, use_rope=False)
+        h = h + attn.gqa_attention(
+            p["cross_attn"], rmsnorm(p["ln_x"], h, cfg.norm_eps), cfg,
+            kv_override=enc_out)
+        h = h + mlp(p["mlp"], rmsnorm(p["ln2"], h, cfg.norm_eps), cfg.act)
+        return h, None
+
+    body = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body, h, params["dec_layers"])
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    return h @ params["embed"].T.astype(h.dtype)
+
+
+def encdec_forward(params: Params, frames: jnp.ndarray, tokens: jnp.ndarray,
+                   cfg: ArchConfig, remat: bool = False
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    params = cast_floating(params, jnp.dtype(cfg.compute_dtype))
+    enc_out = encode(params, frames, cfg, remat=remat)
+    logits = decode_train(params, tokens, enc_out, cfg, remat=remat)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+# --------------------------------------------------------------------------- #
+# incremental decode
+# --------------------------------------------------------------------------- #
+
+
+class EncDecCache(NamedTuple):
+    self_kv: Any                 # stacked (L,) KVCache over decoder positions
+    cross_k: jnp.ndarray         # (L, B, T_enc, KV, dh) static
+    cross_v: jnp.ndarray
+
+
+def init_encdec_caches(batch: int, cfg: ArchConfig, max_len: int,
+                       enc_len: int) -> EncDecCache:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    self_kv = jax.vmap(
+        lambda _: attn.init_kv_cache(batch, cfg, max_len, cdt)
+    )(jnp.arange(cfg.n_layers))
+    shape = (cfg.n_layers, batch, enc_len, kv, dh)
+    return EncDecCache(self_kv, jnp.zeros(shape, cdt), jnp.zeros(shape, cdt))
+
+
+def encdec_cache_struct(batch: int, cfg: ArchConfig, max_len: int,
+                        enc_len: int) -> Any:
+    return jax.eval_shape(
+        functools.partial(init_encdec_caches, batch, cfg, max_len, enc_len))
+
+
+def precompute_cross_kv(params: Params, enc_out: jnp.ndarray, cfg: ArchConfig):
+    b, t, _ = enc_out.shape
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+
+    def one(p):
+        k = (enc_out @ p["cross_attn"]["wk"]).reshape(b, t, kv, dh)
+        v = (enc_out @ p["cross_attn"]["wv"]).reshape(b, t, kv, dh)
+        return k, v
+
+    ks, vs = jax.vmap(one)(params["dec_layers"])
+    return ks, vs
+
+
+def encdec_decode_step(params: Params, token: jnp.ndarray, caches: EncDecCache,
+                       pos, cfg: ArchConfig) -> Tuple[jnp.ndarray, EncDecCache]:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    params = cast_floating(params, cdt)
+    d = cfg.d_model
+    h = params["embed"][token].astype(cdt)
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d))
+    ang = pos.astype(jnp.float32) * div
+    pe = jnp.zeros((d,), jnp.float32).at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+    h = h + pe.astype(cdt)[None, None]
+
+    def body(h, xs):
+        p, kvc, ck, cv = xs
+        y, kvc = attn.gqa_decode(
+            p["self_attn"], rmsnorm(p["ln1"], h, cfg.norm_eps), kvc, pos, cfg)
+        h = h + y
+        y, _ = attn.gqa_decode(
+            p["cross_attn"], rmsnorm(p["ln_x"], h, cfg.norm_eps), kvc, pos, cfg,
+            kv_override=(ck, cv))
+        h = h + y
+        h = h + mlp(p["mlp"], rmsnorm(p["ln2"], h, cfg.norm_eps), cfg.act)
+        return h, kvc
+
+    h, new_self = jax.lax.scan(
+        body, h, (params["dec_layers"], caches.self_kv,
+                  caches.cross_k, caches.cross_v))
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    logits = h @ params["embed"].T.astype(h.dtype)
+    return logits, EncDecCache(new_self, caches.cross_k, caches.cross_v)

@@ -1,0 +1,146 @@
+"""Shared model building blocks (pure-functional, pytree params).
+
+All layers are plain functions ``f(params, x, ...) -> y``; parameters are
+created by ``init_*`` functions returning pytrees of jnp arrays. Layer stacks
+are stored *stacked along axis 0* so the transformer can ``lax.scan`` over
+depth (one compiled layer body regardless of n_layers — essential for the
+40-cell × 2-mesh dry-run on a single CPU core).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------- #
+# init helpers
+# --------------------------------------------------------------------------- #
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------------- #
+
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def groupnorm_heads(x: jnp.ndarray, n_heads: int, eps: float = 1e-5) -> jnp.ndarray:
+    """GroupNorm with one group per head over the last dim (RWKV wkv output)."""
+    dt = x.dtype
+    *lead, d = x.shape
+    x32 = x.astype(jnp.float32).reshape(*lead, n_heads, d // n_heads)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.reshape(*lead, d).astype(dt)
+
+
+# --------------------------------------------------------------------------- #
+# activations / MLP
+# --------------------------------------------------------------------------- #
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+}
+
+
+def init_mlp(key, d: int, f: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, f, dtype),
+        "w_up": dense_init(k2, d, f, dtype),
+        "w_down": dense_init(k3, f, d, dtype),
+    }
+
+
+def mlp(p: Params, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    a = _ACTS[act]
+    h = a(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# --------------------------------------------------------------------------- #
+# rotary embedding
+# --------------------------------------------------------------------------- #
+
+
+def rope_frequencies(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    dt = x.dtype
+    dim = x.shape[-1]
+    freqs = rope_frequencies(dim, theta)                       # (dim/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, dim/2)
+    cos = jnp.cos(angles)[..., :, None, :]                     # (..., S, 1, dim/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+# --------------------------------------------------------------------------- #
+# losses
+# --------------------------------------------------------------------------- #
+
+
+def cast_floating(tree, dtype):
+    """Cast floating leaves to ``dtype`` (params stored fp32, computed bf16)."""
+    import jax
+
+    def one(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(one, tree)
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Stable CE; logits (..., V) fp32-promoted, labels int (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    label_logit = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - label_logit

@@ -1,0 +1,139 @@
+"""Mixture-of-Experts MLP — GShard-style grouped capacity dispatch.
+
+Two dispatch implementations (ablated in EXPERIMENTS.md §Perf):
+
+- ``einsum``: one-hot dispatch/combine einsums (classic TPU MoE — GShard
+  [arXiv:2006.16668] / Switch [arXiv:2101.03961]). Dispatch FLOP overhead is
+  ~``group_size / (3·d_ff)`` of expert compute, MXU-friendly, SPMD-clean.
+- ``scatter``: sort-based token permutation (MegaBlocks-flavored) — moves
+  dispatch cost from FLOPs to bytes (gather/scatter), at the price of less
+  regular collectives under SPMD.
+
+Tokens are processed in groups of ``group_size`` with per-group expert
+capacity ``C = ceil(group_size · top_k · capacity_factor / E)`` (overflow
+tokens are dropped by the router — their residual path passes through).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+
+def init_moe(key, cfg: ArchConfig, dtype) -> Params:
+    m = cfg.moe
+    assert m is not None
+    d, f, e = cfg.d_model, cfg.d_ff, m.n_experts
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / jnp.sqrt(d)
+    return {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "moe_w_gate": (jax.random.normal(ks[1], (e, d, f)) * scale).astype(dtype),
+        "moe_w_up": (jax.random.normal(ks[2], (e, d, f)) * scale).astype(dtype),
+        "moe_w_down": (jax.random.normal(ks[3], (e, f, d)) * (1.0 / jnp.sqrt(f))).astype(dtype),
+    }
+
+
+def _capacity(m: MoEConfig) -> int:
+    c = int(m.group_size * m.top_k * m.capacity_factor / m.n_experts)
+    return max(4, (c + 3) // 4 * 4)
+
+
+def _router(x_groups: jnp.ndarray, p: Params, m: MoEConfig):
+    """x_groups (G, gs, d) → gates (G,gs,k), idx (G,gs,k), probs (G,gs,E), aux."""
+    logits = (x_groups.astype(jnp.float32) @ p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, m.top_k)
+    gates = gates / jnp.clip(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss on the top-1 assignment
+    top1 = jax.nn.one_hot(idx[..., 0], m.n_experts)
+    frac_tokens = jnp.mean(top1, axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = m.n_experts * jnp.sum(frac_tokens * frac_probs)
+    return gates, idx, aux
+
+
+def _expert_ffn(p: Params, h: jnp.ndarray, act) -> jnp.ndarray:
+    """h (E, C', d) → (E, C', d) batched gated MLP."""
+    up = act(jnp.einsum("ecd,edf->ecf", h, p["moe_w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", h, p["moe_w_up"])
+    return jnp.einsum("ecf,efd->ecd", up, p["moe_w_down"])
+
+
+def _moe_einsum(p: Params, xg: jnp.ndarray, m: MoEConfig, act) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    g, gs, d = xg.shape
+    e, cap = m.n_experts, _capacity(m)
+    gates, idx, aux = _router(xg, p, m)
+
+    dispatch = jnp.zeros((g, gs, e, cap), dtype=xg.dtype)
+    combine = jnp.zeros((g, gs, e, cap), dtype=jnp.float32)
+    count = jnp.zeros((g, 1, e), dtype=jnp.int32)
+    for k in range(m.top_k):
+        mask = jax.nn.one_hot(idx[..., k], e, dtype=jnp.int32)      # (G,gs,E)
+        pos = jnp.cumsum(mask, axis=1) - mask + count                # (G,gs,E)
+        keep = (pos < cap) & (mask > 0)
+        count = count + jnp.sum(mask, axis=1, keepdims=True)
+        pos_oh = jax.nn.one_hot(pos, cap, dtype=xg.dtype) * keep[..., None].astype(xg.dtype)
+        dispatch = dispatch + pos_oh
+        combine = combine + pos_oh.astype(jnp.float32) * gates[..., k][..., None, None]
+
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch, xg)           # (E,G,C,d)
+    expert_out = _expert_ffn(p, expert_in.reshape(e, g * cap, d), act)
+    expert_out = expert_out.reshape(e, g, cap, d)
+    out = jnp.einsum("gsec,egcd->gsd", combine.astype(xg.dtype), expert_out)
+    return out, aux
+
+
+def _moe_scatter(p: Params, xg: jnp.ndarray, m: MoEConfig, act) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    g, gs, d = xg.shape
+    e, cap = m.n_experts, _capacity(m)
+    gates, idx, aux = _router(xg, p, m)
+    x = xg.reshape(g * gs, d)
+    n = g * gs
+
+    flat_e = idx.reshape(n, m.top_k).reshape(-1)                     # (n·k,)
+    flat_t = jnp.repeat(jnp.arange(n), m.top_k)
+    flat_g = gates.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted, t_sorted, g_sorted = flat_e[order], flat_t[order], flat_g[order]
+    # rank within expert = index - first index of that expert
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    ranks = jnp.arange(n * m.top_k) - starts[e_sorted]
+    cap_total = max(4, int(n * m.top_k * m.capacity_factor / e))
+    keep = ranks < cap_total
+    slot = jnp.where(keep, e_sorted * cap_total + ranks, e * cap_total)  # drop row
+
+    buf = jnp.zeros((e * cap_total + 1, d), dtype=x.dtype)
+    buf = buf.at[slot].set(x[t_sorted], mode="drop")
+    hidden = _expert_ffn(p, buf[:-1].reshape(e, cap_total, d), act)
+    hidden = hidden.reshape(e * cap_total, d)
+    picked = jnp.where(keep[:, None], hidden[jnp.clip(slot, 0, e * cap_total - 1)], 0.0)
+    out = jnp.zeros((n, d), dtype=jnp.float32)
+    out = out.at[t_sorted].add(picked.astype(jnp.float32) * g_sorted[:, None])
+    return out.astype(x.dtype).reshape(g, gs, d), aux
+
+
+def moe_mlp(p: Params, x: jnp.ndarray, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, d) → (out (B, S, d), aux_loss scalar)."""
+    from repro.models.layers import _ACTS
+    m = cfg.moe
+    assert m is not None
+    act = _ACTS[cfg.act]
+    b, s, d = x.shape
+    n = b * s
+    gs = min(m.group_size, n)
+    assert n % gs == 0, f"tokens {n} not divisible by group {gs}"
+    xg = x.reshape(n // gs, gs, d)
+    if m.dispatch == "scatter":
+        out, aux = _moe_scatter(p, xg, m, act)
+    else:
+        out, aux = _moe_einsum(p, xg, m, act)
+    return out.reshape(b, s, d), aux

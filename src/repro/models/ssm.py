@@ -1,0 +1,366 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba (SSD chunked form).
+
+TPU adaptation (DESIGN.md §2/§5): the sequential selective scans are recast
+as *chunked* recurrences — chunk-local pairwise matmuls (MXU work) plus a
+`lax.scan` over chunks carrying the O(1) state. Decay products are computed
+as bounded ratios ``exp(logdecay_t − logdecay_s) ≤ 1`` (s ≤ t, log-decays
+non-positive), so no overflow-prone factorization is needed.
+
+- RWKV6: data-dependent **vector** decay w_t ∈ (0,1)^K per head, bonus u for
+  the current token, ddlerp token-shift mixing [arXiv:2404.05892].
+- Mamba: **scalar**-per-head decay a_t = exp(−Δ_t·A_h) (Mamba-2/SSD algebra
+  [arXiv:2405.21060]); short causal conv; gated output norm.
+
+Both expose train-time (B,T,d)→(B,T,d) forms and O(1)-state decode steps.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, groupnorm_heads
+
+Params = Dict[str, Any]
+
+_MIX_LORA = 32
+_DECAY_LORA = 64
+
+
+# =========================================================================== #
+# RWKV6
+# =========================================================================== #
+
+
+def init_rwkv6_layer(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    f = cfg.d_ff
+    h = d // cfg.ssm.head_dim
+    ks = jax.random.split(key, 16)
+    p: Params = {
+        # ddlerp token-shift: base mus + per-target lora (w,k,v,r,g)
+        "mu_base": jnp.zeros((d,), dtype),
+        "mu_wkvrg": jnp.zeros((5, d), dtype),
+        "lora_A": dense_init(ks[0], d, 5 * _MIX_LORA, dtype),
+        "lora_B": (jnp.zeros((5, _MIX_LORA, d))).astype(dtype),
+        # decay lora
+        "w0": jnp.full((d,), -6.0, dtype),
+        "wA": dense_init(ks[1], d, _DECAY_LORA, dtype),
+        "wB": jnp.zeros((_DECAY_LORA, d), dtype),
+        # projections
+        "wr": dense_init(ks[2], d, d, dtype),
+        "wk": dense_init(ks[3], d, d, dtype),
+        "wv": dense_init(ks[4], d, d, dtype),
+        "wg": dense_init(ks[5], d, d, dtype),
+        "wo": dense_init(ks[6], d, d, dtype),
+        "u": jnp.zeros((d,), dtype),              # per-channel bonus (heads×K)
+        # channel mix
+        "cm_mu_k": jnp.zeros((d,), dtype),
+        "cm_mu_r": jnp.zeros((d,), dtype),
+        "cm_wk": dense_init(ks[7], d, f, dtype),
+        "cm_wv": dense_init(ks[8], f, d, dtype),
+        "cm_wr": dense_init(ks[9], d, d, dtype),
+    }
+    del h
+    return p
+
+
+def _ddlerp(p: Params, x: jnp.ndarray, x_prev: jnp.ndarray) -> jnp.ndarray:
+    """Data-dependent token-shift interpolation → (5, B, T, d) mixed inputs."""
+    delta = x_prev - x
+    xxx = x + delta * p["mu_base"]
+    lora = jnp.tanh(xxx @ p["lora_A"])
+    b, t, _ = x.shape
+    lora = lora.reshape(b, t, 5, _MIX_LORA)
+    dyn = jnp.einsum("btlr,lrd->lbtd", lora, p["lora_B"])
+    mix = p["mu_wkvrg"][:, None, None, :] + dyn               # (5,B,T,d)
+    return x[None] + delta[None] * mix
+
+
+def _wkv6_chunked(r, k, v, logw, u, chunk: int):
+    """Chunked WKV6. r,k,logw: (B,T,H,K); v: (B,T,H,V); u: (H,K)."""
+    b, t, h, kk = r.shape
+    vv = v.shape[-1]
+    c = min(chunk, t)
+    assert t % c == 0
+    n = t // c
+
+    def to_chunks(a):  # (B,T,H,...) → (N,B,C,H,...)
+        return a.reshape(b, n, c, *a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+
+    r_, k_, v_, lw_ = map(to_chunks, (r, k, v, logw))
+    bsum = jnp.cumsum(lw_, axis=2)                            # inclusive (N,B,C,H,K)
+    bprev = bsum - lw_                                        # exclusive
+
+    tri = jnp.tril(jnp.ones((c, c), bool), -1)                # strict lower
+
+    def body(S, inp):
+        rc, kc, vc, bs, bp, lwc = inp                         # (B,C,H,*)
+        # intra-chunk: A[t,s] = Σ_k r_t k_s exp(bp_t − bs_s), s<t (bounded ≤1)
+        ratio = jnp.exp(jnp.clip(bp[:, :, None] - bs[:, None, :], -60.0, 0.0))
+        A = jnp.einsum("bthk,bshk,btshk->bhts", rc, kc, ratio)
+        A = jnp.where(tri[None, None], A, 0.0)
+        # current-token bonus u
+        diag = jnp.einsum("bthk,bthk->bth", rc * u[None, None], kc)
+        o = jnp.einsum("bhts,bshv->bthv", A, vc)
+        o = o + diag[..., None] * vc
+        # inter-chunk: r_t ⊙ exp(bp_t) attends the carried state
+        o = o + jnp.einsum("bthk,bhkv->bthv", rc * jnp.exp(bp), S)
+        # state update: S ← exp(bs_C) S + Σ_s (k_s exp(bs_C − bs_s)) ⊗ v_s
+        dec_end = jnp.exp(bs[:, -1])                          # (B,H,K)
+        kdec = kc * jnp.exp(jnp.clip(bs[:, -1][:, None] - bs, -60.0, 0.0))
+        S = dec_end[..., None] * S + jnp.einsum("bshk,bshv->bhkv", kdec, vc)
+        return S, o
+
+    S0 = jnp.zeros((b, h, kk, vv), jnp.float32)
+    _, out = jax.lax.scan(body, S0, (r_, k_, v_, bsum, bprev, lw_))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, t, h, vv)   # (B,T,H,V)
+
+
+def rwkv6_time_mix(p: Params, x: jnp.ndarray, cfg: ArchConfig,
+                   x_shift: jnp.ndarray | None = None) -> jnp.ndarray:
+    b, t, d = x.shape
+    hd = cfg.ssm.head_dim
+    h = d // hd
+    first = jnp.zeros((b, 1, d), x.dtype) if x_shift is None else x_shift
+    x_prev = jnp.concatenate([first, x[:, :-1]], axis=1)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, x_prev)
+
+    logw = -jnp.exp(
+        (p["w0"].astype(jnp.float32) +
+         (jnp.tanh(xw @ p["wA"]) @ p["wB"]).astype(jnp.float32)))
+    r = (xr @ p["wr"]).reshape(b, t, h, hd).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(b, t, h, hd).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(b, t, h, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = logw.reshape(b, t, h, hd)
+    u = p["u"].astype(jnp.float32).reshape(h, hd)
+
+    o = _wkv6_chunked(r, k, v, logw, u, cfg.ssm.chunk)
+    o = groupnorm_heads(o.reshape(b, t, d).astype(x.dtype), h, cfg.norm_eps)
+    return (o * g) @ p["wo"]
+
+
+def rwkv6_channel_mix(p: Params, x: jnp.ndarray,
+                      x_shift: jnp.ndarray | None = None) -> jnp.ndarray:
+    b, _, d = x.shape
+    first = jnp.zeros((b, 1, d), x.dtype) if x_shift is None else x_shift
+    x_prev = jnp.concatenate([first, x[:, :-1]], axis=1)
+    xk = x + (x_prev - x) * p["cm_mu_k"]
+    xr = x + (x_prev - x) * p["cm_mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    return jax.nn.sigmoid(xr @ p["cm_wr"]) * (kk @ p["cm_wv"])
+
+
+class RWKVState(NamedTuple):
+    tm_shift: jnp.ndarray        # (B, 1, d)
+    cm_shift: jnp.ndarray        # (B, 1, d)
+    wkv: jnp.ndarray             # (B, H, K, V) fp32
+
+
+def init_rwkv_state(batch: int, cfg: ArchConfig, dtype) -> RWKVState:
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    h = d // hd
+    return RWKVState(
+        jnp.zeros((batch, 1, d), dtype),
+        jnp.zeros((batch, 1, d), dtype),
+        jnp.zeros((batch, h, hd, hd), jnp.float32),
+    )
+
+
+def rwkv6_decode_step(p: Params, x: jnp.ndarray, st: RWKVState,
+                      cfg: ArchConfig) -> Tuple[jnp.ndarray, RWKVState]:
+    """x (B,1,d) → (out_time_mix + channel_mix applied by caller per block)."""
+    b, _, d = x.shape
+    hd = cfg.ssm.head_dim
+    h = d // hd
+    xw, xk, xv, xr, xg = _ddlerp(p, x, st.tm_shift)
+    logw = -jnp.exp(
+        (p["w0"].astype(jnp.float32) +
+         (jnp.tanh(xw @ p["wA"]) @ p["wB"]).astype(jnp.float32)))
+    r = (xr @ p["wr"]).reshape(b, 1, h, hd).astype(jnp.float32)[:, 0]
+    k = (xk @ p["wk"]).reshape(b, 1, h, hd).astype(jnp.float32)[:, 0]
+    v = (xv @ p["wv"]).reshape(b, 1, h, hd).astype(jnp.float32)[:, 0]
+    g = jax.nn.silu(xg @ p["wg"])[:, 0]
+    w = jnp.exp(logw.reshape(b, h, hd))
+    u = p["u"].astype(jnp.float32).reshape(h, hd)
+
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    o = jnp.einsum("bhk,bhkv->bhv", r, st.wkv + u[None, ..., None] * kv)
+    S = w[..., None] * st.wkv + kv
+    o = groupnorm_heads(o.reshape(b, 1, d).astype(x.dtype), h, cfg.norm_eps)
+    out = (o * g[:, None]) @ p["wo"]
+    return out, RWKVState(x, st.cm_shift, S)
+
+
+def rwkv6_channel_mix_decode(p: Params, x: jnp.ndarray, st: RWKVState
+                             ) -> Tuple[jnp.ndarray, RWKVState]:
+    xk = x + (st.cm_shift - x) * p["cm_mu_k"]
+    xr = x + (st.cm_shift - x) * p["cm_mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    out = jax.nn.sigmoid(xr @ p["cm_wr"]) * (kk @ p["cm_wv"])
+    return out, RWKVState(st.tm_shift, x, st.wkv)
+
+
+# =========================================================================== #
+# Mamba (SSD chunked)
+# =========================================================================== #
+
+
+def init_mamba_layer(key, cfg: ArchConfig, dtype) -> Params:
+    """Split projections (z, x, B, C, dt) so z/x column-shard cleanly on the
+    model axis; B/C/dt are small and replicated (DESIGN.md §4)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    h = di // s.head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": dense_init(ks[0], d, di, dtype),
+        "w_x": dense_init(ks[1], d, di, dtype),
+        "w_B": dense_init(ks[2], d, s.d_state, dtype),
+        "w_C": dense_init(ks[3], d, s.d_state, dtype),
+        "w_dt": dense_init(ks[4], d, h, dtype),
+        "conv_x_w": (jax.random.normal(ks[5], (s.conv_width, di)) * 0.2).astype(dtype),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_bc_w": (jax.random.normal(ks[6], (s.conv_width, 2 * s.d_state)) * 0.2).astype(dtype),
+        "conv_bc_b": jnp.zeros((2 * s.d_state,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),     # A = exp(A_log) > 0
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[7], di, d, dtype),
+    }
+
+
+def _ssd_chunked(x, Bm, Cm, loga, chunk: int):
+    """x:(B,T,H,P) Bm/Cm:(B,T,N) loga:(B,T,H) ≤0 → y:(B,T,H,P)."""
+    b, t, h, pp = x.shape
+    nn = Bm.shape[-1]
+    c = min(chunk, t)
+    assert t % c == 0
+    n = t // c
+
+    def to_chunks(a):
+        return a.reshape(b, n, c, *a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+
+    x_, B_, C_, la_ = map(to_chunks, (x, Bm, Cm, loga))
+    cs = jnp.cumsum(la_, axis=2)                              # inclusive (N,B,C,H)
+
+    tri = jnp.tril(jnp.ones((c, c), bool))                    # include diagonal
+
+    def body(S, inp):
+        xc, bc, cc, ls, lw = inp
+        ratio = jnp.exp(jnp.clip(ls[:, :, None] - ls[:, None, :], -60.0, 0.0))
+        ratio = jnp.where(tri[None, :, :, None], ratio, 0.0)  # (B,C,C,H)
+        M = jnp.einsum("btn,bsn->bts", cc, bc)                # (B,C,C)
+        y = jnp.einsum("bts,btsh,bshp->bthp", M, ratio, xc)
+        # inter-chunk from carried state
+        y = y + jnp.einsum("btn,bhpn,bth->bthp", cc, S, jnp.exp(ls))
+        # state update
+        dec_end = jnp.exp(ls[:, -1])                          # (B,H)
+        xdec = xc * jnp.exp(jnp.clip(ls[:, -1][:, None] - ls, -60.0, 0.0))[..., None]
+        S = dec_end[..., None, None] * S + jnp.einsum("bshp,bsn->bhpn", xdec, bc)
+        return S, y
+
+    S0 = jnp.zeros((b, h, pp, nn), jnp.float32)
+    _, out = jax.lax.scan(body, S0, (x_, B_, C_, cs, la_))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, t, h, pp)
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b_: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal short conv; x (B,T,C), w (W,C)."""
+    bsz, t, _ = x.shape
+    width = w.shape[0]
+    pad = jnp.zeros((bsz, width - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    return sum(xp[:, i: i + t] * w[i][None, None] for i in range(width)) + b_
+
+
+def mamba_block(p: Params, u: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """u (B,T,d) → (B,T,d)."""
+    s = cfg.ssm
+    b, t, _ = u.shape
+    di = s.expand * cfg.d_model
+    h = di // s.head_dim
+
+    z = u @ p["w_z"]
+    xs = u @ p["w_x"]
+    bc = jnp.concatenate([u @ p["w_B"], u @ p["w_C"]], axis=-1)
+    dt = u @ p["w_dt"]
+
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_x_w"], p["conv_x_b"]))
+    bc = jax.nn.silu(_causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"]))
+    x = xs.reshape(b, t, h, s.head_dim)
+    Bm = bc[..., : s.d_state]
+    Cm = bc[..., s.d_state:]
+
+    delta = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    loga = -delta * jnp.exp(p["A_log"])[None, None]
+    xin = (x.astype(jnp.float32) * delta[..., None])
+
+    y = _ssd_chunked(xin, Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                     loga, s.chunk)
+    y = y + p["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(b, t, di).astype(u.dtype)
+    # gated RMSNorm (Mamba-2)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)).astype(u.dtype)
+    y = y * p["norm_scale"]
+    return y @ p["out_proj"]
+
+
+class MambaState(NamedTuple):
+    conv_x: jnp.ndarray          # (B, W-1, d_inner)
+    conv_bc: jnp.ndarray         # (B, W-1, 2N)
+    ssm: jnp.ndarray             # (B, H, P, N) fp32
+
+
+def init_mamba_state(batch: int, cfg: ArchConfig, dtype) -> MambaState:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    h = di // s.head_dim
+    return MambaState(
+        jnp.zeros((batch, s.conv_width - 1, di), dtype),
+        jnp.zeros((batch, s.conv_width - 1, 2 * s.d_state), dtype),
+        jnp.zeros((batch, h, s.head_dim, s.d_state), jnp.float32),
+    )
+
+
+def mamba_decode_step(p: Params, u: jnp.ndarray, st: MambaState,
+                      cfg: ArchConfig) -> Tuple[jnp.ndarray, MambaState]:
+    s = cfg.ssm
+    b, _, _ = u.shape
+    di = s.expand * cfg.d_model
+    h = di // s.head_dim
+
+    z = u @ p["w_z"]
+    xs = (u @ p["w_x"])[:, 0]
+    bc = jnp.concatenate([u @ p["w_B"], u @ p["w_C"]], axis=-1)[:, 0]
+    dt = u @ p["w_dt"]
+
+    win_x = jnp.concatenate([st.conv_x, xs[:, None]], axis=1)   # (B, W, di)
+    win_bc = jnp.concatenate([st.conv_bc, bc[:, None]], axis=1)
+    xs = jax.nn.silu(jnp.einsum("bwc,wc->bc", win_x, p["conv_x_w"]) + p["conv_x_b"])
+    bc = jax.nn.silu(jnp.einsum("bwc,wc->bc", win_bc, p["conv_bc_w"]) + p["conv_bc_b"])
+    x = xs.reshape(b, h, s.head_dim)
+    Bm = bc[..., : s.d_state]
+    Cm = bc[..., s.d_state:]
+
+    delta = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(-delta * jnp.exp(p["A_log"])[None])
+    xin = x.astype(jnp.float32) * delta[..., None]
+    S = a[..., None, None] * st.ssm + jnp.einsum(
+        "bhp,bn->bhpn", xin, Bm.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", S, Cm.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)).astype(u.dtype)
+    y = y * p["norm_scale"]
+    return y @ p["out_proj"], MambaState(win_x[:, 1:], win_bc[:, 1:], S)

@@ -1,0 +1,287 @@
+"""Decoder-only LM assembly (dense / MoE / MLA / SSM / hybrid layers).
+
+Layer stacks are *stacked along axis 0* and consumed with ``lax.scan`` so the
+compiled HLO contains one layer body per distinct layer template regardless
+of depth. Hybrid archs (jamba) stack *groups* (one repetition of the layer
+pattern) and scan over groups.
+
+Forward signatures:
+  ``lm_forward(params, tokens, cfg, extra_embeds=None) → (logits, aux)``
+  ``lm_decode_step(params, token, caches, pos, cfg) → (logits, caches)``
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.context import DATA, MODEL, shard_hint
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    cast_floating,
+    embed_init,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    rmsnorm,
+)
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _cdt(cfg: ArchConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# --------------------------------------------------------------------------- #
+# per-layer init/apply
+# --------------------------------------------------------------------------- #
+
+
+def _is_moe_layer(cfg: ArchConfig, idx_in_pattern: int) -> bool:
+    if cfg.moe is None:
+        return False
+    return idx_in_pattern % cfg.moe.every_k_layers == (cfg.moe.every_k_layers - 1) \
+        if cfg.moe.every_k_layers > 1 else True
+
+
+def init_layer(key, cfg: ArchConfig, kind: str, moe_layer: bool, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"ln1": init_rmsnorm(cfg.d_model, dtype)}
+    if kind == "attn":
+        p["attn"] = attn.init_attention(ks[0], cfg, dtype)
+    elif kind == "mamba":
+        p["mixer"] = ssm_mod.init_mamba_layer(ks[0], cfg, dtype)
+    elif kind == "rwkv6":
+        p["mixer"] = ssm_mod.init_rwkv6_layer(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if kind != "rwkv6":                      # rwkv layer embeds its own ffn
+        p["ln2"] = init_rmsnorm(cfg.d_model, dtype)
+        if moe_layer:
+            p["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    else:
+        p["ln2"] = init_rmsnorm(cfg.d_model, dtype)
+    return p
+
+
+def apply_layer(p: Params, h: jnp.ndarray, cfg: ArchConfig, kind: str,
+                moe_layer: bool) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pre-norm residual block → (h, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        h = h + attn.attention(
+            p["attn"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg)
+    elif kind == "mamba":
+        h = h + ssm_mod.mamba_block(p["mixer"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg)
+    elif kind == "rwkv6":
+        h = h + ssm_mod.rwkv6_time_mix(p["mixer"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg)
+        h = h + ssm_mod.rwkv6_channel_mix(p["mixer"], rmsnorm(p["ln2"], h, cfg.norm_eps))
+        return h, aux
+    x = rmsnorm(p["ln2"], h, cfg.norm_eps)
+    if moe_layer:
+        y, aux = moe_mod.moe_mlp(p["moe"], x, cfg)
+    else:
+        y = mlp(p["mlp"], x, cfg.act)
+    h = h + y
+    h = shard_hint(h, DATA, None, None)
+    return h, aux
+
+
+# --------------------------------------------------------------------------- #
+# full-model init
+# --------------------------------------------------------------------------- #
+
+
+def _pattern(cfg: ArchConfig) -> Tuple[str, ...]:
+    if cfg.hybrid_pattern is not None:
+        return cfg.hybrid_pattern
+    if cfg.family == "ssm" and cfg.ssm is not None and cfg.ssm.kind == "rwkv6":
+        return ("rwkv6",)
+    if cfg.family == "ssm":
+        return ("mamba",)
+    return ("attn",)
+
+
+def init_lm(key, cfg: ArchConfig) -> Params:
+    dtype = _dtype(cfg)
+    pattern = _pattern(cfg)
+    n_groups = cfg.n_layers // len(pattern)
+    assert cfg.n_layers % len(pattern) == 0
+    ks = jax.random.split(key, 4)
+
+    def group_init(gkey):
+        sub = jax.random.split(gkey, len(pattern))
+        return [
+            init_layer(sub[i], cfg, pattern[i], _is_moe_layer(cfg, i), dtype)
+            for i in range(len(pattern))
+        ]
+
+    gkeys = jax.random.split(ks[0], n_groups)
+    stacked = jax.vmap(group_init)(gkeys)      # list of stacked layer pytrees
+
+    params: Params = {
+        "embed": embed_init(ks[1], cfg.vocab_size, cfg.d_model, dtype),
+        "groups": stacked,
+        "ln_f": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(ks[2], cfg.d_model, cfg.vocab_size, dtype)
+    return params
+
+
+def lm_param_struct(cfg: ArchConfig) -> Any:
+    """ShapeDtypeStruct pytree without allocating (dry-run path)."""
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(functools.partial(init_lm, cfg=cfg), key)
+
+
+# --------------------------------------------------------------------------- #
+# forward (train / prefill)
+# --------------------------------------------------------------------------- #
+
+
+def lm_backbone(params: Params, h: jnp.ndarray, cfg: ArchConfig,
+                remat: bool = False, unroll: bool = False
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``unroll=True`` emits one HLO body per group instead of a scan —
+    used by the roofline calibration (cost_analysis counts while bodies
+    once; an unrolled module is loop-free and countable)."""
+    pattern = _pattern(cfg)
+
+    def group_body(carry, gp):
+        h, aux = carry
+        for i, kind in enumerate(pattern):
+            h, a = apply_layer(gp[i], h, cfg, kind, _is_moe_layer(cfg, i))
+            aux = aux + a
+        return (h, aux), None
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    carry = (h, jnp.zeros((), jnp.float32))
+    if unroll:
+        n_groups = jax.tree.leaves(params["groups"])[0].shape[0]
+        for g in range(n_groups):
+            gp = jax.tree.map(lambda x: x[g], params["groups"])
+            carry, _ = body(carry, gp)
+        return carry
+    (h, aux), _ = jax.lax.scan(body, carry, params["groups"])
+    return h, aux
+
+
+def lm_logits(params: Params, h: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ w.astype(h.dtype)
+    return shard_hint(logits, DATA, None, MODEL)
+
+
+def lm_forward(
+    params: Params,
+    tokens: jnp.ndarray,                       # (B, S_text) int32
+    cfg: ArchConfig,
+    *,
+    extra_embeds: Optional[jnp.ndarray] = None,  # (B, P, d) prepended (vlm)
+    remat: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    cdt = _cdt(cfg)
+    params = cast_floating(params, cdt)
+    h = params["embed"][tokens].astype(cdt)
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(cdt), h], axis=1)
+    h = shard_hint(h, DATA, None, None)
+    h, aux = lm_backbone(params, h, cfg, remat=remat)
+    return lm_logits(params, h, cfg), aux
+
+
+# --------------------------------------------------------------------------- #
+# decode (one token, stacked caches, scan over groups)
+# --------------------------------------------------------------------------- #
+
+
+class LayerCache(NamedTuple):
+    """Per-group cache union; unused fields are shape-(0,) placeholders."""
+    attn: Any
+    ssm: Any
+
+
+def init_caches(batch: int, cfg: ArchConfig, max_len: int) -> Any:
+    """Stacked (n_groups, ...) cache pytree."""
+    cdt = _cdt(cfg)
+    pattern = _pattern(cfg)
+    n_groups = cfg.n_layers // len(pattern)
+
+    def one_group(_):
+        caches = []
+        for kind in pattern:
+            if kind == "attn":
+                caches.append(attn.init_decode_cache(batch, cfg, max_len, cdt))
+            elif kind == "mamba":
+                caches.append(ssm_mod.init_mamba_state(batch, cfg, cdt))
+            elif kind == "rwkv6":
+                caches.append(ssm_mod.init_rwkv_state(batch, cfg, cdt))
+        return caches
+
+    return jax.vmap(one_group)(jnp.arange(n_groups))
+
+
+def cache_struct(batch: int, cfg: ArchConfig, max_len: int) -> Any:
+    return jax.eval_shape(
+        functools.partial(init_caches, batch, cfg, max_len))
+
+
+def lm_decode_step(
+    params: Params,
+    token: jnp.ndarray,                        # (B, 1) int32
+    caches: Any,
+    pos,                                       # scalar int32
+    cfg: ArchConfig,
+) -> Tuple[jnp.ndarray, Any]:
+    cdt = _cdt(cfg)
+    params = cast_floating(params, cdt)
+    pattern = _pattern(cfg)
+    h = params["embed"][token].astype(cdt)
+
+    def group_body(h, xs):
+        gp, gcache = xs
+        new_caches = []
+        for i, kind in enumerate(pattern):
+            p = gp[i]
+            c = gcache[i]
+            if kind == "attn":
+                y, c = attn.attention_decode(
+                    p["attn"], rmsnorm(p["ln1"], h, cfg.norm_eps), c, pos, cfg)
+                h = h + y
+            elif kind == "mamba":
+                y, c = ssm_mod.mamba_decode_step(
+                    p["mixer"], rmsnorm(p["ln1"], h, cfg.norm_eps), c, cfg)
+                h = h + y
+            elif kind == "rwkv6":
+                y, c = ssm_mod.rwkv6_decode_step(
+                    p["mixer"], rmsnorm(p["ln1"], h, cfg.norm_eps), c, cfg)
+                h = h + y
+                y, c = ssm_mod.rwkv6_channel_mix_decode(
+                    p["mixer"], rmsnorm(p["ln2"], h, cfg.norm_eps), c)
+                h = h + y
+            if kind in ("attn", "mamba"):
+                x = rmsnorm(p["ln2"], h, cfg.norm_eps)
+                if _is_moe_layer(cfg, i):
+                    y, _ = moe_mod.moe_mlp(p["moe"], x, cfg)
+                else:
+                    y = mlp(p["mlp"], x, cfg.act)
+                h = h + y
+            new_caches.append(c)
+        return h, new_caches
+
+    h, new_caches = jax.lax.scan(group_body, h, (params["groups"], caches))
+    return lm_logits(params, h, cfg), new_caches

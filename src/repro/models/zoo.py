@@ -1,0 +1,139 @@
+"""Model zoo: uniform entry points over all assigned architectures.
+
+``Model`` bundles init / forward / decode functions per family so the
+training loop, serving engine, and dry-run treat every arch identically:
+
+  forward(params, batch)         → (logits, aux)     batch: dict of arrays
+  decode_step(params, token, caches, pos) → (logits, caches)
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as lm_mod
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[..., Any]                   # (key) → params
+    param_struct: Callable[[], Any]            # () → ShapeDtypeStruct tree
+    forward: Callable[..., Any]                # (params, batch, remat=) → (logits, aux)
+    init_caches: Callable[..., Any]            # (batch, max_len) → caches
+    cache_struct: Callable[..., Any]
+    decode_step: Callable[..., Any]            # (params, token, caches, pos)
+
+
+def _lm_forward(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig,
+                remat: bool = False):
+    return lm_mod.lm_forward(
+        params, batch["tokens"], cfg,
+        extra_embeds=batch.get("patch_embeds"), remat=remat)
+
+
+def _encdec_forward(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig,
+                    remat: bool = False):
+    return encdec_mod.encdec_forward(
+        params, batch["frames"], batch["tokens"], cfg, remat=remat)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.encdec:
+        return Model(
+            cfg=cfg,
+            init=functools.partial(encdec_mod.init_encdec, cfg=cfg),
+            param_struct=functools.partial(encdec_mod.encdec_param_struct, cfg),
+            forward=functools.partial(_encdec_forward, cfg=cfg),
+            init_caches=functools.partial(
+                _encdec_caches, cfg=cfg),
+            cache_struct=functools.partial(_encdec_cache_struct, cfg=cfg),
+            decode_step=functools.partial(_encdec_decode, cfg=cfg),
+        )
+    return Model(
+        cfg=cfg,
+        init=functools.partial(lm_mod.init_lm, cfg=cfg),
+        param_struct=functools.partial(lm_mod.lm_param_struct, cfg),
+        forward=functools.partial(_lm_forward, cfg=cfg),
+        init_caches=functools.partial(_lm_caches, cfg=cfg),
+        cache_struct=functools.partial(_lm_cache_struct, cfg=cfg),
+        decode_step=functools.partial(_lm_decode, cfg=cfg),
+    )
+
+
+def _lm_caches(batch: int, max_len: int, cfg: ArchConfig):
+    return lm_mod.init_caches(batch, cfg, max_len)
+
+
+def _lm_cache_struct(batch: int, max_len: int, cfg: ArchConfig):
+    return lm_mod.cache_struct(batch, cfg, max_len)
+
+
+def _lm_decode(params, token, caches, pos, cfg: ArchConfig):
+    return lm_mod.lm_decode_step(params, token, caches, pos, cfg)
+
+
+def _encdec_caches(batch: int, max_len: int, cfg: ArchConfig,
+                   enc_len: Optional[int] = None):
+    return encdec_mod.init_encdec_caches(
+        batch, cfg, max_len, enc_len if enc_len is not None else max_len)
+
+
+def _encdec_cache_struct(batch: int, max_len: int, cfg: ArchConfig,
+                         enc_len: Optional[int] = None):
+    return encdec_mod.encdec_cache_struct(
+        batch, cfg, max_len, enc_len if enc_len is not None else max_len)
+
+
+def _encdec_decode(params, token, caches, pos, cfg: ArchConfig):
+    return encdec_mod.encdec_decode_step(params, token, caches, pos, cfg)
+
+
+# --------------------------------------------------------------------------- #
+# batch construction (real + abstract)
+# --------------------------------------------------------------------------- #
+
+
+def batch_struct(cfg: ArchConfig, global_batch: int, seq_len: int) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one training batch of this arch (stub frontends
+    included — DESIGN.md §5)."""
+    f32 = jnp.dtype(cfg.compute_dtype)
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if cfg.encdec:
+        return {
+            "frames": sds((global_batch, seq_len, cfg.d_model), f32),
+            "tokens": sds((global_batch, seq_len), i32),
+            "labels": sds((global_batch, seq_len), i32),
+        }
+    if cfg.frontend == "vision_stub":
+        p = cfg.n_frontend_tokens
+        return {
+            "patch_embeds": sds((global_batch, p, cfg.d_model), f32),
+            "tokens": sds((global_batch, seq_len - p), i32),
+            "labels": sds((global_batch, seq_len), i32),
+        }
+    return {
+        "tokens": sds((global_batch, seq_len), i32),
+        "labels": sds((global_batch, seq_len), i32),
+    }
+
+
+def make_dummy_batch(cfg: ArchConfig, global_batch: int, seq_len: int,
+                     key=None) -> Dict[str, jnp.ndarray]:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    structs = batch_struct(cfg, global_batch, seq_len)
+    out = {}
+    for name, s in structs.items():
+        k, key = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab_size, s.dtype)
+        else:
+            out[name] = jax.random.normal(k, s.shape, s.dtype) * 0.02
+    return out

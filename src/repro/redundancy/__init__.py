@@ -1,0 +1,1 @@
+"""Redundancy schemes: partner copies, XOR/Reed-Solomon erasure groups."""

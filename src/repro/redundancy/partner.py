@@ -1,0 +1,53 @@
+"""L2 partner-copy replication (FTI/SCR PARTNER scheme).
+
+Each rank ships its checkpoint payload to its ring partner, which stores it
+next to its own (``rank<k>.partner<j>.chk5``). A lost node's state is then
+recovered from its partner's node-local storage — no PFS round-trip.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+from repro.core.comm import Communicator
+from repro.redundancy.groups import Topology
+
+
+def partner_tag(ckpt_id: int) -> str:
+    return f"partner:{ckpt_id}"
+
+
+def replicate(comm: Communicator, topo: Topology, ckpt_id: int,
+              payload: bytes) -> int:
+    """Send my payload to my partner; returns the partner rank."""
+    partner = topo.partner_of(comm.rank)
+    comm.post(partner_tag(ckpt_id), partner, payload)
+    return partner
+
+
+def store_partner_copy(comm: Communicator, topo: Topology, ckpt_id: int,
+                       tier_dir: str) -> Optional[str]:
+    """Collect the replica posted *to me* and persist it locally."""
+    # whoever has me as partner:
+    src = next((r for r in range(comm.world) if topo.partner_of(r) == comm.rank),
+               None)
+    if src is None:
+        return None
+    payload = comm.collect(partner_tag(ckpt_id), src)
+    if payload is None:
+        return None
+    os.makedirs(tier_dir, exist_ok=True)
+    path = os.path.join(tier_dir, f"rank{comm.rank}.partner{src}.chk5")
+    with open(path, "wb") as f:
+        f.write(payload)
+        f.flush()
+        os.fsync(f.fileno())
+    return path
+
+
+def find_partner_copy(topo: Topology, ckpt_dir_path: str, lost_rank: int
+                      ) -> Optional[str]:
+    """Locate the replica of ``lost_rank`` inside a checkpoint directory."""
+    holder = topo.partner_of(lost_rank)
+    path = os.path.join(ckpt_dir_path, f"rank{holder}.partner{lost_rank}.chk5")
+    return path if os.path.exists(path) else None

@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants (the dry-run's compile target)."""
+
+PEAK_FLOPS_BF16 = 197e12        # per chip, bf16
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_LINK_BW = 50e9              # bytes/s per link (one active direction)
+HBM_BYTES = 16 * 2**30          # 16 GiB per chip
+
+CHIPS_PER_POD = 256

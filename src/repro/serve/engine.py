@@ -1,0 +1,82 @@
+"""Serving engine: batched prefill + incremental decode with KV caches.
+
+``make_serve_step`` builds the single-token decode step that the dry-run
+lowers for the ``decode_32k`` / ``long_500k`` cells. The engine's state
+(caches + positions + generated tokens) is a pytree, so OpenCHK can
+checkpoint a *serving* process too — a failed server resumes decoding
+without re-running prefill (examples/serve_resilient.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.zoo import Model
+
+
+class ServeState(NamedTuple):
+    caches: Any
+    pos: jnp.ndarray             # scalar int32 — next write position
+    last_token: jnp.ndarray      # (B, 1) int32
+
+
+def make_serve_step(model: Model) -> Callable[..., Tuple[jnp.ndarray, Any]]:
+    """serve_step(params, token (B,1), caches, pos) → (next_token, caches).
+
+    Greedy argmax sampling (deterministic — serving benchmarks measure the
+    system, not the sampler).
+    """
+
+    def serve_step(params, token, caches, pos):
+        logits, caches = model.decode_step(params, token, caches, pos)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return nxt, caches
+
+    return serve_step
+
+
+class ServingEngine:
+    """Minimal batched serving loop over a fixed request batch."""
+
+    def __init__(self, model: Model, params: Any, batch: int, max_len: int):
+        self.model = model
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self._step = jax.jit(make_serve_step(model))
+        self._decode_warm = jax.jit(model.decode_step)
+        self.state: Optional[ServeState] = None
+
+    def prefill(self, prompts: jnp.ndarray) -> None:
+        """Sequential prefill through the decode path (cache-exact; fine for
+        the small CPU examples — large-scale prefill uses model.forward)."""
+        b, s = prompts.shape
+        caches = self.model.init_caches(b, self.max_len)
+        tok = prompts[:, :1]
+        for i in range(s):
+            logits, caches = self._decode_warm(
+                self.params, prompts[:, i: i + 1], caches, jnp.int32(i))
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        self.state = ServeState(caches, jnp.int32(s), nxt)
+
+    def generate(self, n_tokens: int) -> jnp.ndarray:
+        assert self.state is not None, "prefill first (or restore a checkpoint)"
+        toks = []
+        st = self.state
+        for _ in range(n_tokens):
+            nxt, caches = self._step(self.params, st.last_token, st.caches, st.pos)
+            st = ServeState(caches, st.pos + 1, nxt)
+            toks.append(nxt)
+        self.state = st
+        return jnp.concatenate(toks, axis=1)
+
+    # --- checkpointable serving state (OpenCHK integration) -------------- #
+    def get_state(self) -> ServeState:
+        return self.state
+
+    def set_state(self, st: ServeState) -> None:
+        self.state = st

@@ -1,0 +1,50 @@
+"""``python -m repro.tools.chkls <file.chk5>`` — inspect CHK5 containers.
+
+The paper's HDF5 argument: checkpoints double as analyzable datasets, with
+standard tools. This is that tool for CHK5.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from repro.core.formats import CHK5Reader
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="list CHK5 checkpoint contents")
+    ap.add_argument("file")
+    ap.add_argument("--verify", action="store_true", help="check all crc32s")
+    ap.add_argument("--stats", action="store_true",
+                    help="per-dataset min/max/mean for float data")
+    args = ap.parse_args(argv)
+
+    rd = CHK5Reader(args.file, verify=args.verify)
+    root_attrs = rd.attrs("")
+    if root_attrs:
+        print(f"attrs: {root_attrs}")
+    total = 0
+    for name in rd.datasets():
+        m = rd.info(name)
+        total += m["nbytes"]
+        line = (f"  {name:60s} {m['dtype']:>10s} "
+                f"{str(tuple(m['shape'])):>20s} {m['nbytes']:>12,d} B")
+        if args.stats and m["dtype"] != "bytes":
+            try:
+                a = rd.read_dataset(name).astype(np.float32)
+                if a.size:
+                    line += (f"  [{a.min():+.3e}, {a.max():+.3e}]"
+                             f" μ={a.mean():+.3e}")
+            except (TypeError, ValueError):
+                pass
+        print(line)
+    print(f"{len(rd.datasets())} datasets, {total:,} bytes"
+          + ("  (crc OK)" if args.verify else ""))
+    rd.close()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,120 @@
+"""Training loop with OpenCHK integration — the end-to-end driver core.
+
+The whole CR surface in the loop is exactly the paper's five lines:
+
+    ctx = CheckpointContext(cfg, comm)                 # chk init
+    state = ctx.load(state)                            # chk load
+    ...
+    ctx.store(state, id=step, level=lv, if_=cond)      # chk store
+    ctx.shutdown()                                     # chk shutdown
+
+Level cycling follows FTI practice: frequent cheap L1, periodic L2/L3,
+rare L4 (PFS). Heartbeats feed the launcher's failure detector.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.core.context import CHK_DIFF, CHK_FULL, CheckpointConfig, CheckpointContext
+from repro.data.synthetic import next_batch
+from repro.ft.detector import Heartbeat
+from repro.ft.failures import FaultInjector
+from repro.models.zoo import Model
+from repro.train.optimizer import AdamWConfig
+from repro.train.state import TrainState
+
+
+@dataclass
+class LevelSchedule:
+    """FTI-style level cycle: which level for the k-th checkpoint."""
+    l1_every: int = 1
+    l2_every: int = 2
+    l3_every: int = 4
+    l4_every: int = 8
+
+    def level_for(self, ckpt_index: int) -> int:
+        if self.l4_every and ckpt_index % self.l4_every == 0:
+            return 4
+        if self.l3_every and ckpt_index % self.l3_every == 0:
+            return 3
+        if self.l2_every and ckpt_index % self.l2_every == 0:
+            return 2
+        return 1
+
+
+@dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 10
+    kind: str = CHK_FULL            # CHK_DIFF → differential checkpoints
+    levels: LevelSchedule = field(default_factory=LevelSchedule)
+    heartbeat_path: Optional[str] = None
+    log_every: int = 10
+
+
+def run_training(
+    model: Model,
+    train_step: Callable,
+    state: TrainState,
+    ckpt: CheckpointContext,
+    loop: LoopConfig,
+    global_batch: int,
+    seq_len: int,
+    injector: Optional[FaultInjector] = None,
+    log: Callable[[str], None] = print,
+) -> Dict[str, Any]:
+    """Run (or resume) training to total_steps. Returns summary metrics."""
+    hb = Heartbeat(loop.heartbeat_path) if loop.heartbeat_path else None
+    jit_step = jax.jit(train_step) if not hasattr(train_step, "lower") else train_step
+
+    # ---- chk load: transparent restart ---------------------------------- #
+    state = ckpt.load(state)
+    start = int(state.step)
+    if ckpt.restarted:
+        log(f"[openchk] restart detected → resuming from step {start}")
+
+    t0 = time.time()
+    metrics: Dict[str, Any] = {}
+    n_ckpts = 0
+    batch_fn = jax.jit(lambda ds: next_batch(ds, model.cfg, global_batch, seq_len))
+
+    for step in range(start, loop.total_steps):
+        batch, next_ds = batch_fn(state.data_state)
+        state, metrics = jit_step(state, batch)
+        state = state._replace(data_state=next_ds)   # exactly-once cursor
+
+        if injector is not None:
+            injector.maybe_fail(step + 1)
+
+        # ---- chk store with if_/id/level/kind clauses ------------------- #
+        is_ckpt = (step + 1) % loop.ckpt_every == 0
+        if is_ckpt:
+            n_ckpts += 1
+        ckpt.store(
+            state,
+            id=step + 1,
+            level=loop.levels.level_for(n_ckpts),
+            kind=loop.kind,
+            if_=is_ckpt,
+        )
+
+        if hb is not None:
+            hb.beat(step + 1)
+        if (step + 1) % loop.log_every == 0:
+            log(f"step {step + 1:5d} loss {float(metrics['loss']):.4f} "
+                f"({(time.time() - t0):.1f}s)")
+
+    ckpt.wait()
+    return {
+        "final_step": loop.total_steps,
+        "loss": float(metrics.get("loss", float("nan"))),
+        "seconds": time.time() - t0,
+        "restarted": ckpt.restarted,
+        "stats": dict(ckpt.stats),
+        "state": state,
+    }

@@ -1,0 +1,39 @@
+"""Training state pytree — the unit the OpenCHK directives protect."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import AdamWState, adamw_init
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray            # scalar int32 — doubles as the checkpoint id
+    params: Any
+    opt: AdamWState
+    rng: jnp.ndarray             # PRNG key
+    data_state: Any              # checkpointable data-pipeline cursor
+
+
+def init_train_state(params: Any, rng, data_state: Any) -> TrainState:
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        opt=adamw_init(params),
+        rng=rng,
+        data_state=data_state,
+    )
+
+
+def train_state_struct(param_struct: Any, data_state_struct: Any) -> TrainState:
+    """Abstract TrainState for dry-run lowering."""
+    opt = jax.eval_shape(adamw_init, param_struct)
+    return TrainState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        params=param_struct,
+        opt=opt,
+        rng=jax.ShapeDtypeStruct((2,), jnp.uint32),
+        data_state=data_state_struct,
+    )

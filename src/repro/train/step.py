@@ -1,0 +1,111 @@
+"""Train-step factory: loss, grads, microbatch accumulation, optimizer.
+
+Data-parallel gradient averaging is *implicit*: parameters are replicated on
+the (pod×)data axes so GSPMD inserts the grad all-reduce (or reduce-scatter +
+all-gather under ZeRO-1 — selected purely by the optimizer-state sharding;
+see ``launch/dryrun.py``). An explicit int8-compressed gradient-sync variant
+lives in ``repro/dist/compression.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.zoo import Model
+from repro.models.layers import softmax_cross_entropy
+from repro.train.optimizer import AdamWConfig, adamw_update
+from repro.train.state import TrainState
+
+
+def compute_loss(model: Model, params: Any, batch: Dict[str, jnp.ndarray],
+                 remat: bool = False) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, aux = model.forward(params, batch, remat=remat)
+    labels = batch["labels"]
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    ce = softmax_cross_entropy(logits, safe)
+    ce = jnp.sum(ce * valid) / jnp.maximum(1.0, jnp.sum(valid))
+    w = model.cfg.moe.router_aux_weight if model.cfg.moe is not None else 0.0
+    loss = ce + w * aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: AdamWConfig,
+    *,
+    remat: bool = True,
+    num_microbatches: int = 1,
+) -> Callable[[TrainState, Dict[str, jnp.ndarray]], Tuple[TrainState, Dict]]:
+    """Build ``train_step(state, batch) → (state, metrics)`` for jit/pjit."""
+
+    grad_fn = jax.value_and_grad(
+        lambda p, b: compute_loss(model, p, b, remat=remat), has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return grads, metrics
+
+    def microbatched(params, batch):
+        mb = num_microbatches
+
+        def split(x):
+            return x.reshape(mb, x.shape[0] // mb, *x.shape[1:])
+
+        batches = jax.tree.map(split, batch)
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mbatch):
+            acc, _ = carry
+            (loss, metrics), grads = grad_fn(params, mbatch)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / mb, acc, grads)
+            return (acc, metrics), None
+
+        (grads, metrics), _ = jax.lax.scan(
+            body, (zero_g, {"loss": jnp.zeros(()), "ce": jnp.zeros(()),
+                            "aux": jnp.zeros(())}), batches)
+        return grads, metrics
+
+    accumulate = single if num_microbatches == 1 else microbatched
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]
+                   ) -> Tuple[TrainState, Dict]:
+        grads, metrics = accumulate(state.params, batch)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, grads, state.opt, state.params)
+        metrics = dict(metrics, **opt_metrics)
+        new_state = TrainState(
+            step=state.step + 1,
+            params=new_params,
+            opt=new_opt,
+            rng=jax.random.fold_in(state.rng, 0),
+            data_state=state.data_state,
+        )
+        return new_state, metrics
+
+    return train_step
+
+
+def make_fused_data_train_step(model: Model, opt_cfg: AdamWConfig,
+                               global_batch: int, seq_len: int,
+                               remat: bool = True, num_microbatches: int = 1):
+    """Variant that draws its batch from the in-state data cursor — the form
+    lowered by the dry-run (batch generation fused into the step) and used by
+    the training loop for exactly-once data semantics."""
+    from repro.data.synthetic import next_batch
+
+    step_fn = make_train_step(model, opt_cfg, remat=remat,
+                              num_microbatches=num_microbatches)
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        new_state, metrics = step_fn(state, batch)
+        _, new_data = next_batch(state.data_state, model.cfg, global_batch, seq_len)
+        return new_state._replace(data_state=new_data), metrics
+
+    return train_step

@@ -1,0 +1,155 @@
+"""Backends: TCL surface parity, native APIs, diff support matrix."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backends.fti import FTIBackend
+from repro.backends.registry import ENV_VAR, make_backend
+from repro.backends.scr import SCRBackend
+from repro.backends.veloc import VELOC_FAILURE, VELOC_SUCCESS, VeloCBackend
+from repro.core.comm import LocalComm
+from repro.core.context import CHK_DIFF, CHK_FULL, CheckpointConfig, CheckpointContext
+from repro.core.storage import StorageConfig
+
+
+def _cfg(tmp_path, name):
+    return StorageConfig(root=str(tmp_path / name))
+
+
+def _comm(tmp_path, name):
+    return LocalComm(str(tmp_path / name / "node-local"))
+
+
+NAMED = {"a": np.arange(10, dtype=np.float32),
+         "b": np.ones((3, 3), np.int32)}
+
+
+@pytest.mark.parametrize("backend", ["fti", "scr", "veloc"])
+def test_tcl_surface_roundtrip(tmp_path, backend):
+    b = make_backend(_cfg(tmp_path, backend), _comm(tmp_path, backend),
+                     backend)
+    assert b.tcl_load() is None
+    b.tcl_store(NAMED, 1, 4, CHK_FULL)
+    b.tcl_wait()
+    got = b.tcl_load()
+    assert set(got) == {"a", "b"}
+    assert np.array_equal(got["a"], NAMED["a"])
+    b.tcl_finalize()
+
+
+@pytest.mark.parametrize("backend,fallbacks", [("fti", 0), ("scr", 1),
+                                               ("veloc", 1)])
+def test_diff_support_matrix(tmp_path, backend, fallbacks):
+    """Paper §3: only FTI has checkpoint kinds; others fall back to FULL."""
+    b = make_backend(_cfg(tmp_path, backend), _comm(tmp_path, backend),
+                     backend)
+    b.tcl_store(NAMED, 1, 1, CHK_FULL)
+    b.tcl_wait()
+    b.tcl_store(NAMED, 2, 1, CHK_DIFF)
+    b.tcl_wait()
+    assert b.stats["diff_fallbacks"] == fallbacks
+    got = b.tcl_load()
+    assert np.array_equal(got["a"], NAMED["a"])
+    b.tcl_finalize()
+
+
+def test_fti_native_api(tmp_path):
+    b = FTIBackend(_cfg(tmp_path, "f"), _comm(tmp_path, "f"),
+                   dedicated_thread=False)
+    assert b.status() is False
+    b.protect(0, "step", np.int32(7))
+    b.protect(1, "data", np.arange(5.0))
+    rep = b.checkpoint(1, level=1)
+    assert rep is not None and rep.kind == CHK_FULL
+    assert b.status() is True
+    got = b.recover()
+    assert got[0] == 7 and np.array_equal(got[1], np.arange(5.0))
+    b.finalize()
+
+
+def test_fti_differential_payload_shrinks(tmp_path):
+    b = FTIBackend(_cfg(tmp_path, "fd"), _comm(tmp_path, "fd"),
+                   dedicated_thread=False)
+    big = np.zeros(100_000, np.float32)
+    b.protect(0, "big", big)
+    full = b.checkpoint(1, level=1)
+    big2 = big.copy()
+    big2[5] = 1.0
+    b.protect(0, "big", big2)
+    diff = b.checkpoint(2, level=1, differential=True)
+    assert diff.kind == CHK_DIFF
+    assert diff.bytes_payload < full.bytes_payload / 3
+    got = b.recover()
+    assert np.array_equal(got[0], big2)
+
+
+def test_scr_native_file_mode(tmp_path):
+    b = SCRBackend(_cfg(tmp_path, "s"), _comm(tmp_path, "s"))
+    b.start_checkpoint(1, level=1)
+    path = b.route_file("my.ckpt")
+    from repro.core.formats import CHK5Writer
+    with CHK5Writer(path) as w:
+        w.write_dataset("data/x", np.arange(4.0))
+    rep = b.complete_checkpoint(valid=True)
+    assert rep is not None
+    assert b.have_restart() == 1
+    cid = b.start_restart()
+    rpath = b.route_file("my.ckpt")
+    from repro.core.formats import CHK5Reader
+    assert np.array_equal(CHK5Reader(rpath).read_dataset("data/x"),
+                          np.arange(4.0))
+    b.complete_restart(True)
+
+
+def test_scr_invalid_checkpoint_aborts(tmp_path):
+    b = SCRBackend(_cfg(tmp_path, "sa"), _comm(tmp_path, "sa"))
+    b.start_checkpoint(1, level=1)
+    b.route_file("x")
+    assert b.complete_checkpoint(valid=False) is None
+    assert b.have_restart() is None
+
+
+def test_veloc_native_api(tmp_path):
+    b = VeloCBackend(_cfg(tmp_path, "v"), _comm(tmp_path, "v"))
+    assert b.restart_test("job") == VELOC_FAILURE
+    b.mem_protect(0, np.int32(3), "t")
+    b.mem_protect(1, np.arange(6.0), "arr")
+    assert b.checkpoint("job", 1) == VELOC_SUCCESS
+    assert b.checkpoint_wait() == VELOC_SUCCESS
+    assert b.restart_test("job") == 1
+    assert b.restart("job", 1) == VELOC_SUCCESS
+    assert np.array_equal(b.recovered(1), np.arange(6.0))
+    b.tcl_finalize()
+
+
+def test_env_backend_selection(tmp_path, monkeypatch):
+    monkeypatch.setenv(ENV_VAR, "veloc")
+    b = make_backend(_cfg(tmp_path, "e"), _comm(tmp_path, "e"))
+    assert b.name == "veloc"
+    monkeypatch.setenv(ENV_VAR, "nope")
+    with pytest.raises(KeyError):
+        make_backend(_cfg(tmp_path, "e2"), _comm(tmp_path, "e2"))
+
+
+def test_portability_same_code_all_backends(tmp_path, monkeypatch):
+    """The paper's portability claim: identical app code, backend from env."""
+    state = {"w": jnp.arange(8.0), "step": jnp.int32(0)}
+    results = {}
+    for backend in ("fti", "scr", "veloc"):
+        monkeypatch.setenv(ENV_VAR, backend)
+        d = str(tmp_path / f"port-{backend}")
+        # -- identical application code, no backend mention --
+        ctx = CheckpointContext(CheckpointConfig(dir=d))
+        s = ctx.load(state)
+        s = {"w": s["w"] + 1, "step": s["step"] + 1}
+        ctx.store(s, id=1, level=1)
+        ctx.shutdown()
+        ctx2 = CheckpointContext(CheckpointConfig(dir=d))
+        s2 = ctx2.load(state)
+        results[backend] = (ctx2.restarted, np.asarray(s2["w"]))
+        ctx2.shutdown()
+    for backend, (restarted, w) in results.items():
+        assert restarted, backend
+        assert np.array_equal(w, np.arange(8.0) + 1), backend

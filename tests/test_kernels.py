@@ -1,0 +1,89 @@
+"""Pallas kernels vs jnp oracles — shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.blockhash import BE, BR, blockhash2_pallas, blockhash_pallas
+from repro.kernels.diffpack import diffpack_pallas, diffunpack_pallas
+
+
+@pytest.mark.parametrize("rows_mult,elems_mult", [(1, 1), (2, 1), (1, 3), (4, 2)])
+def test_blockhash_matches_ref(rows_mult, elems_mult):
+    rng = np.random.RandomState(rows_mult * 10 + elems_mult)
+    x = rng.randint(0, 2**32, size=(BR * rows_mult, BE * elems_mult),
+                    dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(blockhash_pallas(jnp.asarray(x), interpret=True))
+    want = np.asarray(ref.blockhash_ref(jnp.asarray(x)))
+    assert np.array_equal(got, want)
+
+
+def test_blockhash2_two_lanes_differ():
+    rng = np.random.RandomState(0)
+    x = rng.randint(0, 2**32, size=(BR, BE), dtype=np.uint64).astype(np.uint32)
+    h = np.asarray(blockhash2_pallas(jnp.asarray(x), interpret=True))
+    assert h.shape == (BR, 2)
+    assert not np.array_equal(h[:, 0], h[:, 1])
+    assert np.array_equal(h, np.asarray(ref.blockhash2_ref(jnp.asarray(x))))
+
+
+@pytest.mark.parametrize("n_blocks,elems,n_dirty",
+                         [(8, 128, 3), (16, 256, 16), (4, 512, 1)])
+def test_diffpack_matches_ref(n_blocks, elems, n_dirty):
+    rng = np.random.RandomState(n_blocks)
+    blocks = rng.randn(n_blocks, elems).astype(np.float32)
+    idx = rng.choice(n_blocks, size=n_dirty, replace=False).astype(np.int32)
+    got = np.asarray(diffpack_pallas(jnp.asarray(blocks), jnp.asarray(idx),
+                                     interpret=True))
+    want = np.asarray(ref.diffpack_ref(jnp.asarray(blocks), jnp.asarray(idx)))
+    assert np.array_equal(got, want)
+
+
+def test_diffunpack_matches_ref():
+    rng = np.random.RandomState(3)
+    base = rng.randn(16, 128).astype(np.float32)
+    idx = np.array([1, 7, 13], np.int32)
+    packed = rng.randn(3, 128).astype(np.float32)
+    got = np.asarray(diffunpack_pallas(
+        jnp.asarray(base), jnp.asarray(packed), jnp.asarray(idx),
+        interpret=True))
+    want = np.asarray(ref.diffunpack_ref(
+        jnp.asarray(base), jnp.asarray(packed), jnp.asarray(idx)))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32,
+                                   jnp.float64, jnp.uint8])
+def test_ops_blockhash_dtypes(dtype):
+    if dtype == jnp.float64:
+        x = jnp.arange(1000).astype(jnp.float32).astype(dtype)
+    else:
+        x = jnp.arange(1000).astype(dtype)
+    h = ops.blockhash(x, 256)
+    assert h.dtype == jnp.uint32 and h.shape[1] == 2
+    # deterministic
+    assert np.array_equal(np.asarray(h), np.asarray(ops.blockhash(x, 256)))
+    # sensitive to any element change (use a value exactly representable in
+    # every tested dtype — bf16 rounds 999+1 back to 1000 == original)
+    x2 = x.at[999].set(jnp.asarray(-5).astype(dtype))
+    assert not np.array_equal(np.asarray(h),
+                              np.asarray(ops.blockhash(x2, 256)))
+
+
+def test_ops_dirty_indices():
+    h1 = np.zeros((10, 2), np.uint32)
+    h2 = h1.copy()
+    h2[3, 0] = 1
+    h2[7, 1] = 9
+    assert ops.dirty_indices(h2, h1).tolist() == [3, 7]
+    assert ops.dirty_indices(h2, None).tolist() == list(range(10))
+
+
+def test_ops_pack_dirty_roundtrip():
+    x = jnp.arange(4096, dtype=jnp.float32)
+    idx = jnp.asarray([0, 5], dtype=jnp.int32)
+    packed = ops.pack_dirty(x, idx, 2, 256)
+    blocks, _ = ops.as_u32_blocks(x, 256)
+    assert np.array_equal(np.asarray(packed),
+                          np.asarray(blocks)[np.asarray(idx)])

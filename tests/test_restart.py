@@ -1,0 +1,161 @@
+"""End-to-end restart semantics: exactly-once data, bitwise resume parity,
+directive clauses, fault-injection loop."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.context import (
+    CHK_DIFF,
+    CHK_FULL,
+    CheckpointConfig,
+    CheckpointContext,
+)
+from repro.data.synthetic import init_data_state
+from repro.ft.failures import FaultInjector, SimulatedFault
+from repro.models.zoo import build_model
+from repro.train.loop import LevelSchedule, LoopConfig, run_training
+from repro.train.optimizer import AdamWConfig
+from repro.train.state import init_train_state
+from repro.train.step import make_train_step
+
+
+def _setup(arch="tinyllama-1.1b", seed=0):
+    cfg = get_arch(arch).reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(seed))
+    state = init_train_state(params, jax.random.PRNGKey(seed + 1),
+                             init_data_state(seed))
+    step = make_train_step(m, AdamWConfig(total_steps=20, warmup_steps=2),
+                           remat=False)
+    return cfg, m, state, step
+
+
+def _leaves(state):
+    return jax.tree.leaves(state.params)
+
+
+def test_resume_is_bitwise_identical(tmp_path):
+    """Train 10 straight vs train → crash at 7 → restore → finish: identical
+    final params (exactly-once data via the in-state cursor)."""
+    cfg, m, state0, step = _setup()
+    loop = LoopConfig(total_steps=10, ckpt_every=3,
+                      levels=LevelSchedule(l2_every=0, l3_every=0, l4_every=0))
+
+    # run A: straight through
+    ctxa = CheckpointContext(CheckpointConfig(
+        dir=str(tmp_path / "a"), backend="fti", dedicated_thread=False))
+    outA = run_training(m, step, state0, ctxa, loop, 2, 32,
+                        log=lambda *_: None)
+    ctxa.shutdown()
+
+    # run B: fault at step 7 → restart → resume from checkpoint at step 6
+    ctxb = CheckpointContext(CheckpointConfig(
+        dir=str(tmp_path / "b"), backend="fti", dedicated_thread=False))
+    inj = FaultInjector(total_steps=10, at_progress=0.7)
+    with pytest.raises(SimulatedFault):
+        run_training(m, step, state0, ctxb, loop, 2, 32, injector=inj,
+                     log=lambda *_: None)
+    ctxb.shutdown()
+    ctxb2 = CheckpointContext(CheckpointConfig(
+        dir=str(tmp_path / "b"), backend="fti", dedicated_thread=False))
+    outB = run_training(m, step, state0, ctxb2, loop, 2, 32,
+                        log=lambda *_: None)
+    ctxb2.shutdown()
+    assert outB["restarted"]
+
+    for a, b in zip(_leaves(outA["state"]), _leaves(outB["state"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(outA["state"].data_state.position) == \
+        int(outB["state"].data_state.position) == 10
+
+
+def test_training_loop_advances_data_cursor(tmp_path):
+    cfg, m, state, step = _setup()
+    loop = LoopConfig(total_steps=4, ckpt_every=2,
+                      levels=LevelSchedule(l2_every=0, l3_every=0, l4_every=0))
+    ctx = CheckpointContext(CheckpointConfig(
+        dir=str(tmp_path / "c"), backend="fti", dedicated_thread=False))
+    run_training(m, step, state, ctx, loop, 2, 32, log=lambda *_: None)
+    ctx.shutdown()
+    ctx2 = CheckpointContext(CheckpointConfig(
+        dir=str(tmp_path / "c"), backend="fti", dedicated_thread=False))
+    restored = ctx2.load(state)
+    assert ctx2.restarted
+    assert int(restored.step) == 4
+    assert int(restored.data_state.position) == 4
+    ctx2.shutdown()
+
+
+def test_if_clause_switches_off(tmp_path):
+    state = {"x": jnp.ones(4)}
+    ctx = CheckpointContext(CheckpointConfig(dir=str(tmp_path / "i"),
+                                             backend="fti",
+                                             dedicated_thread=False))
+    assert ctx.store(state, id=1, level=1, if_=False) is None
+    assert ctx.stats["stores"] == 0
+    got = ctx.load(state, if_=False)
+    assert got is state
+    ctx.shutdown()
+
+
+def test_id_level_mandatory():
+    ctx_cls = CheckpointContext
+    import inspect
+    sig = inspect.signature(ctx_cls.store)
+    assert sig.parameters["id"].default is inspect.Parameter.empty
+    assert sig.parameters["level"].default is inspect.Parameter.empty
+
+
+def test_selectors_protect_subtree(tmp_path):
+    state = {"params": {"w": jnp.arange(4.0)}, "opt": {"m": jnp.zeros(4)},
+             "step": jnp.int32(3)}
+    ctx = CheckpointContext(CheckpointConfig(dir=str(tmp_path / "s"),
+                                             backend="fti",
+                                             dedicated_thread=False))
+    ctx.protect("params/**", "step")
+    ctx.store(state, id=1, level=1)
+    ctx.shutdown()
+    ctx2 = CheckpointContext(CheckpointConfig(dir=str(tmp_path / "s"),
+                                              backend="fti",
+                                              dedicated_thread=False))
+    ctx2.protect("params/**", "step")
+    template = {"params": {"w": jnp.zeros(4)}, "opt": {"m": jnp.ones(4) * 9},
+                "step": jnp.int32(0)}
+    got = ctx2.load(template)
+    assert np.array_equal(np.asarray(got["params"]["w"]), np.arange(4.0))
+    assert int(got["step"]) == 3
+    # unprotected leaf keeps the template value
+    assert np.array_equal(np.asarray(got["opt"]["m"]), np.ones(4) * 9)
+    ctx2.shutdown()
+
+
+def test_store_after_shutdown_raises(tmp_path):
+    ctx = CheckpointContext(CheckpointConfig(dir=str(tmp_path / "z"),
+                                             backend="fti",
+                                             dedicated_thread=False))
+    ctx.shutdown()
+    with pytest.raises(RuntimeError):
+        ctx.store({"x": jnp.ones(2)}, id=1, level=1)
+
+
+def test_diff_then_restart_loop(tmp_path):
+    """Differential checkpoints through the full training loop + restart."""
+    cfg, m, state, step = _setup()
+    loop = LoopConfig(total_steps=6, ckpt_every=2, kind=CHK_DIFF,
+                      levels=LevelSchedule(l2_every=0, l3_every=0, l4_every=0))
+    ctx = CheckpointContext(CheckpointConfig(
+        dir=str(tmp_path / "d"), backend="fti", dedicated_thread=False))
+    inj = FaultInjector(total_steps=6, at_progress=0.9)
+    with pytest.raises(SimulatedFault):
+        run_training(m, step, state, ctx, loop, 2, 32, injector=inj,
+                     log=lambda *_: None)
+    ctx.shutdown()
+    ctx2 = CheckpointContext(CheckpointConfig(
+        dir=str(tmp_path / "d"), backend="fti", dedicated_thread=False))
+    out = run_training(m, step, state, ctx2, loop, 2, 32, log=lambda *_: None)
+    assert out["restarted"] and out["final_step"] == 6
+    ctx2.shutdown()

@@ -1,0 +1,145 @@
+"""Roofline machinery: HLO collective parser, analytic-model invariants,
+and the scan-body-once behavior that motivates the analytic model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import SHAPE_BY_NAME, get_arch
+from repro.configs.base import ShapeSpec
+from repro.roofline.analyze import parse_collectives
+from repro.roofline.analytic import analytic_report
+
+HLO_SAMPLE = """
+HloModule test
+ENTRY main {
+  %p = f32[256,1024]{1,0} parameter(0)
+  %ar = f32[256,1024]{1,0} all-reduce(f32[256,1024]{1,0} %p), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[1024,4096]{1,0} all-gather(bf16[1024,1024]{1,0} %x), replica_groups={{0,1,2,3}}, dimensions={1}
+  %rs = f32[64,1024]{1,0} reduce-scatter(f32[256,1024]{1,0} %p), replica_groups={{0,1,2,3}}, to_apply=%add
+  %cp = f32[8]{0} collective-permute(f32[8]{0} %y), source_target_pairs={{0,1}}
+  %aa = f32[16,16]{1,0} all-to-all(f32[16,16]{1,0} %z), replica_groups={{0,1}}
+}
+"""
+
+
+def test_parse_collectives_counts_and_wire():
+    stats = parse_collectives(HLO_SAMPLE)
+    assert stats.counts == {"all-reduce": 1, "all-gather": 1,
+                            "reduce-scatter": 1, "collective-permute": 1,
+                            "all-to-all": 1}
+    ar = 2 * (256 * 1024 * 4) * 3 / 4
+    ag = (1024 * 4096 * 2) * 3 / 4
+    rs = (64 * 1024 * 4) * 3
+    cp = 8 * 4
+    aa = 16 * 16 * 4 * 1 / 2
+    assert stats.wire_bytes == pytest.approx(ar + ag + rs + cp + aa)
+
+
+def test_parse_ignores_done_ops_and_single_groups():
+    txt = """
+  %a = f32[8]{0} all-reduce-start(f32[8]{0} %p), replica_groups={{0,1}}
+  %b = f32[8]{0} all-reduce-done(f32[8]{0} %a)
+  %c = f32[8]{0} all-reduce(f32[8]{0} %p), replica_groups={{0}}
+"""
+    stats = parse_collectives(txt)
+    assert stats.counts.get("all-reduce", 0) == 1   # -start only, group>1
+
+
+def test_scan_body_counted_once():
+    """The motivating XLA behavior: cost_analysis sees a while body once."""
+    w = jnp.ones((64, 64))
+
+    def body(h, _):
+        return h @ w, None
+
+    def scan5(h):
+        return jax.lax.scan(body, h, None, length=5)[0]
+
+    def unroll5(h):
+        for _ in range(5):
+            h = h @ w
+        return h
+
+    h = jnp.ones((64, 64))
+    f_scan = jax.jit(scan5).lower(h).compile().cost_analysis()["flops"]
+    f_unroll = jax.jit(unroll5).lower(h).compile().cost_analysis()["flops"]
+    assert f_unroll == pytest.approx(5 * f_scan, rel=0.01)
+
+
+# --------------------------- analytic invariants --------------------------- #
+
+ARCHS = ["tinyllama-1.1b", "mixtral-8x7b", "rwkv6-3b", "whisper-small",
+         "jamba-1.5-large-398b", "minicpm3-4b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_terms_positive_and_finite(arch):
+    cfg = get_arch(arch)
+    for shape in cfg.shapes():
+        r = analytic_report(cfg, shape, dp=16, tp=16)
+        for k in ("t_compute", "t_memory", "t_collective"):
+            assert np.isfinite(r[k]) and r[k] >= 0, (arch, shape.name, k)
+        assert r["flops_per_device"] > 0
+        assert 0 < r["useful_flops_ratio"] < 3, (arch, shape.name,
+                                                 r["useful_flops_ratio"])
+
+
+def test_flops_scale_with_batch():
+    cfg = get_arch("tinyllama-1.1b")
+    s1 = ShapeSpec("t", "train", 4096, 256)
+    s2 = ShapeSpec("t", "train", 4096, 512)
+    r1 = analytic_report(cfg, s1, dp=16, tp=16)
+    r2 = analytic_report(cfg, s2, dp=16, tp=16)
+    assert r2["flops_per_device"] == pytest.approx(
+        2 * r1["flops_per_device"], rel=0.01)
+
+
+def test_no_collectives_on_single_device():
+    cfg = get_arch("tinyllama-1.1b")
+    r = analytic_report(cfg, SHAPE_BY_NAME["train_4k"], dp=1, tp=1)
+    assert r["wire_bytes_per_device"] == 0.0
+
+
+def test_zero1_wire_equal_fp32_smaller_bf16():
+    """ZeRO-1 = RS(grad fp32) + AG(params): equals all-reduce wire at fp32
+    params (4+4 vs 2·4 bytes/param); beats it with bf16 params (4+2 < 8)."""
+    import dataclasses
+    cfg = get_arch("tinyllama-1.1b")
+    sh = SHAPE_BY_NAME["train_4k"]
+    base = analytic_report(cfg, sh, dp=16, tp=16)
+    z1 = analytic_report(cfg, sh, dp=16, tp=16, zero1=True)
+    assert z1["wire_bytes_per_device"] == pytest.approx(
+        base["wire_bytes_per_device"])
+    bf = dataclasses.replace(cfg, param_dtype="bfloat16")
+    z1b = analytic_report(bf, sh, dp=16, tp=16, zero1=True)
+    assert z1b["wire_bytes_per_device"] < base["wire_bytes_per_device"]
+
+
+def test_swa_cheaper_than_full_attention_at_32k():
+    """Mixtral's sliding window must cut prefill attention flops."""
+    import dataclasses
+    cfg = get_arch("mixtral-8x7b")
+    full = dataclasses.replace(cfg, sliding_window=None)
+    sh = SHAPE_BY_NAME["prefill_32k"]
+    r_swa = analytic_report(cfg, sh, dp=16, tp=16)
+    r_full = analytic_report(full, sh, dp=16, tp=16)
+    assert r_swa["flops_per_device"] < 0.75 * r_full["flops_per_device"]
+
+
+def test_remat_adds_compute_removes_nothing_else():
+    cfg = get_arch("llama3.2-3b")
+    sh = SHAPE_BY_NAME["train_4k"]
+    r_on = analytic_report(cfg, sh, dp=16, tp=16, remat=True)
+    r_off = analytic_report(cfg, sh, dp=16, tp=16, remat=False)
+    assert r_on["flops_per_device"] == pytest.approx(
+        4 / 3 * r_off["flops_per_device"], rel=0.05)
+
+
+def test_model_flops_moe_counts_active_only():
+    cfg = get_arch("mixtral-8x7b")
+    n_active = cfg.flops_param_count()
+    # mixtral: ~13B active of ~47B total
+    total = cfg.param_count(active_only=False)
+    assert n_active < 0.35 * total

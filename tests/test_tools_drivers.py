@@ -1,0 +1,61 @@
+"""CLI tools and end-to-end drivers (chkls, launch.train, heat2d parity)."""
+import os
+import shutil
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+
+def test_chkls_cli(tmp_path, capsys):
+    from repro.core.formats import CHK5Writer
+    from repro.tools.chkls import main as chkls_main
+    p = str(tmp_path / "x.chk5")
+    with CHK5Writer(p) as w:
+        w.write_dataset("data/a", np.arange(6.0).reshape(2, 3))
+        w.set_attrs("", {"id": 1})
+    assert chkls_main([p, "--verify", "--stats"]) == 0
+    out = capsys.readouterr().out
+    assert "data/a" in out and "crc OK" in out and "μ=" in out
+
+
+def test_launch_train_worker_restart(tmp_path):
+    """launch.train direct mode: fault → rerun → resume (subprocess)."""
+    env = dict(os.environ, PYTHONPATH="src")
+    d = str(tmp_path / "t")
+    base = [sys.executable, "-m", "repro.launch.train", "--arch",
+            "tinyllama-1.1b", "--steps", "20", "--batch", "2", "--seq", "32",
+            "--ckpt-every", "5", "--ckpt-dir", d, "--no-dedicated-thread"]
+    r1 = subprocess.run(base + ["--inject-at", "0.8"], env=env,
+                        capture_output=True, text=True, timeout=420)
+    assert r1.returncode != 0
+    assert "injected fault" in (r1.stderr + r1.stdout)
+    r2 = subprocess.run(base, env=env, capture_output=True, text=True,
+                        timeout=420)
+    assert r2.returncode == 0, r2.stderr[-1000:]
+    assert "restart detected" in r2.stdout
+    assert "'final_step': 20" in r2.stdout
+
+
+@pytest.mark.parametrize("variant", ["openchk", "fti", "scr", "veloc"])
+def test_heat2d_variants_restart_parity(tmp_path, variant):
+    """All four CR variants converge to the same physics after a fault."""
+    sys.path.insert(0, ".")
+    from benchmarks.apps import (
+        heat2d_fti, heat2d_openchk, heat2d_scr, heat2d_veloc)
+    from repro.ft.failures import FaultInjector, SimulatedFault
+    mod = {"openchk": heat2d_openchk, "fti": heat2d_fti,
+           "scr": heat2d_scr, "veloc": heat2d_veloc}[variant]
+    from benchmarks.apps.heat2d_common import heat_step, init_grid, checksum
+    g = init_grid(32)
+    for _ in range(40):
+        g = heat_step(g)
+    want = checksum(g)
+    d = str(tmp_path / variant)
+    inj = FaultInjector(total_steps=40, at_progress=0.9)
+    with pytest.raises(SimulatedFault):
+        mod.run(n=32, steps=40, ckpt_every=10, ckpt_dir=d, injector=inj)
+    out = mod.run(n=32, steps=40, ckpt_every=10, ckpt_dir=d)
+    assert out["restarted"]
+    assert abs(out["checksum"] - want) < 1e-3
