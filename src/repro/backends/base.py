@@ -1,19 +1,44 @@
-"""Backend base: the "native library" surface each backend exposes.
+"""Backend base: the "native library" surface each backend exposes, plus
+the *uniform* pipeline driving that all of them share.
 
 Each backend mirrors the real library's API shape (names, call protocol,
 quirks) — that is what the paper's SLOC/programmability comparison is
 about: using these *directly* is verbose; using them through the OpenCHK
 directives is five lines (benchmarks/bench_sloc.py reproduces Tables 4–6).
+
+What a backend *declares* (capabilities):
+
+    supports_diff               checkpoint kinds (CHK_DIFF) available?
+    supports_dedicated_thread   CP-dedicated thread (§4.2.2) available?
+    supports_incremental        §8 incremental stores available?
+    max_level                   deepest ladder rung
+
+What a backend *composes* (``compose_tiers``): the level → tier-stack map
+the pipeline places with.  No backend re-implements placement, redundancy
+or commit — those are pipeline stages (core/pipeline.py); file-mode
+protocols (SCR) enter the pipeline at Place via ``finish_external``.
+
+Asynchrony is uniform: Plan always runs on the calling thread (device
+snapshot / on-device diff kernels, digest ordering); when the backend has a
+CP-dedicated thread, the Pack → Place → Commit tail is submitted to it —
+for FULL, DIFF *and* incremental stores alike.
 """
 from __future__ import annotations
 
 import abc
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, Optional
 
 import numpy as np
 
+from repro.core.async_engine import CPDedicatedThread
 from repro.core.comm import Communicator
-from repro.core.storage import StorageConfig, StorageEngine, StoreReport
+from repro.core.storage import (
+    CHK_FULL,
+    StorageConfig,
+    StorageEngine,
+    StoreReport,
+    StoreRequest,
+)
 
 
 class Backend(abc.ABC):
@@ -22,28 +47,102 @@ class Backend(abc.ABC):
     name: str = "?"
     supports_diff: bool = False
     supports_dedicated_thread: bool = False
+    supports_incremental: bool = True
     max_level: int = 4
 
-    def __init__(self, cfg: StorageConfig, comm: Communicator):
+    def __init__(self, cfg: StorageConfig, comm: Communicator,
+                 dedicated_thread: Optional[bool] = None):
         self.cfg = cfg
         self.comm = comm
-        self.engine = StorageEngine(cfg, comm)
+        self.engine = StorageEngine(cfg, comm, compose=self.compose_tiers())
+        self.pipeline = self.engine.pipeline
+        use_cp = (self.supports_dedicated_thread if dedicated_thread is None
+                  else dedicated_thread and self.supports_dedicated_thread)
+        self._cp: Optional[CPDedicatedThread] = (
+            CPDedicatedThread(name=f"openchk-cp-{self.name}")
+            if use_cp else None)
         self.stats: Dict[str, Any] = {"stores": 0, "loads": 0,
                                       "diff_fallbacks": 0, "bytes": 0}
 
+    # --- declaration hooks -------------------------------------------- #
+
+    def compose_tiers(self) -> Optional[Callable]:
+        """Return a ``TierContext → {level: [Tier, ...]}`` composer, or None
+        for the default FTI ladder (core/tiers.default_tier_stacks).
+        Override to plug in custom tiers without touching the pipeline."""
+        return None
+
+    def capabilities(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "diff": self.supports_diff,
+            "dedicated_thread": self.supports_dedicated_thread,
+            "incremental": self.supports_incremental,
+            "max_level": self.max_level,
+        }
+
     # --- uniform surface driven by TCL -------------------------------- #
 
-    @abc.abstractmethod
-    def tcl_store(self, named: Dict[str, np.ndarray], ckpt_id: int,
-                  level: int, kind: str) -> StoreReport:
-        ...
+    def tcl_store(self, named: Dict[str, Any], ckpt_id: int,
+                  level: int, kind: str) -> Optional[StoreReport]:
+        """Plan on the calling thread; finish sync or on the CP thread.
+        Returns None when the store was handed to the CP thread (errors
+        surface at the next directive, FTI-style)."""
+        if self._cp is not None:
+            # surface deferred failures BEFORE plan() touches the digest
+            # chain — otherwise a dropped store leaves digests pointing at
+            # data no committed checkpoint holds
+            self._cp.check_errors()
+        if kind != CHK_FULL and not self.supports_diff:
+            self.stats["diff_fallbacks"] += 1
+        plan = self.pipeline.plan(StoreRequest(
+            named=named, ckpt_id=ckpt_id, level=min(level, self.max_level),
+            kind=kind, diff_supported=self.supports_diff))
+        if self._cp is not None:
+            self._cp.submit(ckpt_id, lambda: self._finish(plan))
+            return None
+        return self._finish(plan)
 
-    @abc.abstractmethod
+    def _finish(self, plan) -> StoreReport:
+        rep = self.pipeline.finish(plan)
+        self.stats["stores"] += 1
+        self.stats["bytes"] += rep.bytes_payload
+        return rep
+
     def tcl_load(self) -> Optional[Dict[str, np.ndarray]]:
-        ...
+        self.tcl_wait()
+        got = self.engine.load_latest()
+        if got is None:
+            return None
+        self.stats["loads"] += 1
+        return got[0]
+
+    def tcl_store_begin(self, ckpt_id: int, level: int,
+                        extra_meta: Optional[Dict[str, Any]] = None):
+        """Open an incremental store routed through this backend's pipeline
+        (and its CP thread, when present)."""
+        if not self.supports_incremental:
+            raise NotImplementedError(
+                f"backend {self.name!r} has no incremental stores")
+        from repro.core.incremental import IncrementalStore
+        return IncrementalStore(self.engine, ckpt_id, level,
+                                extra_meta=extra_meta, cp=self._cp,
+                                stats=self.stats)
 
     def tcl_wait(self) -> None:
-        """Fence asynchronous work (default: synchronous backend)."""
+        """Fence asynchronous work (no-op for synchronous backends)."""
+        if self._cp is not None:
+            self._cp.wait()
+            self._cp.check_errors()
 
     def tcl_finalize(self) -> None:
-        self.tcl_wait()
+        if self._cp is not None:
+            self._cp.wait()
+            try:
+                # a failure in the very last async store must not vanish:
+                # shutdown is the final directive that can surface it
+                self._cp.check_errors()
+            finally:
+                self._cp.shutdown()
+        else:
+            self.tcl_wait()

@@ -4,6 +4,9 @@ checkpointing, CP-dedicated threads (the feature superset — §3 of the paper).
 Native API mirrors FTI: ``protect / status / recover / checkpoint /
 finalize``. Protect registers (id, name, array); checkpoint writes all
 protected regions; recover returns them by id after a restart.
+
+The heavy lifting is the shared pipeline (Plan → Pack → Place → Commit);
+this class only translates FTI's protect-registry call protocol onto it.
 """
 from __future__ import annotations
 
@@ -12,7 +15,6 @@ from typing import Any, Dict, Optional, Tuple
 import numpy as np
 
 from repro.backends.base import Backend
-from repro.core.async_engine import CPDedicatedThread
 from repro.core.comm import Communicator
 from repro.core.storage import CHK_DIFF, CHK_FULL, StorageConfig, StoreReport
 
@@ -21,13 +23,13 @@ class FTIBackend(Backend):
     name = "fti"
     supports_diff = True
     supports_dedicated_thread = True
+    supports_incremental = True
     max_level = 4
 
     def __init__(self, cfg: StorageConfig, comm: Communicator,
                  dedicated_thread: bool = True):
-        super().__init__(cfg, comm)
+        super().__init__(cfg, comm, dedicated_thread=dedicated_thread)
         self._protected: Dict[int, Tuple[str, np.ndarray]] = {}
-        self._cp = CPDedicatedThread() if dedicated_thread else None
 
     # ----------------------- native FTI-style API ---------------------- #
 
@@ -36,10 +38,12 @@ class FTIBackend(Backend):
 
     def status(self) -> bool:
         """FTI_Status: is there anything to recover?"""
+        self.tcl_wait()
         return self.engine.load_latest() is not None
 
     def recover(self) -> Dict[int, np.ndarray]:
         """FTI_Recover: refill protected regions from the newest checkpoint."""
+        self.tcl_wait()
         got = self.engine.load_latest()
         if got is None:
             raise RuntimeError("FTI: no checkpoint to recover")
@@ -58,49 +62,10 @@ class FTIBackend(Backend):
         named = {f"p{pid}/{name}": np.asarray(arr)
                  for pid, (name, arr) in self._protected.items()}
         kind = CHK_DIFF if differential else CHK_FULL
-        if self._cp is not None:
-            self._cp.check_errors()
-            self._cp.submit(
-                ckpt_id, lambda: self._store_sync(named, ckpt_id, level, kind))
-            return None
-        return self._store_sync(named, ckpt_id, level, kind)
+        return self.tcl_store(named, ckpt_id, level, kind)
 
     def checkpoint_wait(self) -> None:
-        if self._cp is not None:
-            self._cp.wait()
-            self._cp.check_errors()
+        self.tcl_wait()
 
     def finalize(self) -> None:
-        if self._cp is not None:
-            self._cp.shutdown()
-
-    # ----------------------- TCL uniform surface ----------------------- #
-
-    def _store_sync(self, named, ckpt_id, level, kind) -> StoreReport:
-        rep = self.engine.store(named, ckpt_id, level, kind,
-                                diff_supported=True)
-        self.stats["stores"] += 1
-        self.stats["bytes"] += rep.bytes_payload
-        return rep
-
-    def tcl_store(self, named, ckpt_id, level, kind) -> Optional[StoreReport]:
-        if self._cp is not None:
-            self._cp.check_errors()
-            self._cp.submit(
-                ckpt_id, lambda: self._store_sync(named, ckpt_id, level, kind))
-            return None
-        return self._store_sync(named, ckpt_id, level, kind)
-
-    def tcl_load(self):
-        self.tcl_wait()
-        got = self.engine.load_latest()
-        if got is None:
-            return None
-        self.stats["loads"] += 1
-        return got[0]
-
-    def tcl_wait(self) -> None:
-        self.checkpoint_wait()
-
-    def tcl_finalize(self) -> None:
-        self.finalize()
+        self.tcl_finalize()

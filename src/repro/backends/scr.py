@@ -2,13 +2,14 @@
 start/complete checkpoint-phase protocol + custom redundancy groups.
 
 The user (or TCL) is handed a *path* to write; SCR decides where that path
-lives (which tier), applies the redundancy scheme on complete, and manages
-restart discovery (`have_restart` → `start_restart` → route → complete).
+lives (which tier), and on ``complete_checkpoint`` enters the shared
+pipeline at the Place stage — redundancy and the manifest commit are
+pipeline code, not SCR code.  Restart discovery (`have_restart` →
+`start_restart` → route → complete) reads through the same recovery ladder.
 """
 from __future__ import annotations
 
 import os
-import shutil
 from typing import Dict, Optional
 
 import numpy as np
@@ -18,18 +19,21 @@ from repro.core import manifest as mf
 from repro.core.comm import Communicator
 from repro.core.formats import CHK5Reader, CHK5Writer
 from repro.core.storage import CHK_FULL, StorageConfig, StoreReport
-from repro.redundancy.partner import replicate, store_partner_copy
 
 
 class SCRBackend(Backend):
     name = "scr"
     supports_diff = False            # SCR has no checkpoint kinds
     supports_dedicated_thread = False
+    supports_incremental = True
     max_level = 4
 
     def __init__(self, cfg: StorageConfig, comm: Communicator,
-                 checkpoint_interval: int = 1):
-        super().__init__(cfg, comm)
+                 checkpoint_interval: int = 1,
+                 dedicated_thread: Optional[bool] = None):
+        # dedicated_thread accepted for a uniform construction surface;
+        # SCR declares no CP-thread support, so it can only stay False
+        super().__init__(cfg, comm, dedicated_thread=dedicated_thread)
         self._phase: Optional[str] = None
         self._cur_id: Optional[int] = None
         self._cur_level: int = 2
@@ -48,8 +52,7 @@ class SCRBackend(Backend):
         self._phase = "ckpt"
         self._cur_id = ckpt_id
         self._cur_level = level
-        root = self.engine._tier_root(level)
-        mf.begin(root, ckpt_id)
+        mf.begin(self.pipeline.tier_root(level), ckpt_id)
         self._routed.clear()
         self._since_ckpt = 0
 
@@ -57,7 +60,7 @@ class SCRBackend(Backend):
         """SCR_Route_file: where should this rank write ``name``?"""
         assert self._phase in ("ckpt", "restart"), "route_file outside phase"
         if self._phase == "ckpt":
-            root = self.engine._tier_root(self._cur_level)
+            root = self.pipeline.tier_root(self._cur_level)
             d = mf.ckpt_dir(root, self._cur_id, tmp=True)
             path = os.path.join(d, f"rank{self.comm.rank}.chk5")
             self._routed[name] = path
@@ -69,34 +72,21 @@ class SCRBackend(Backend):
         assert self._phase == "ckpt"
         self._phase = None
         ckpt_id, level = self._cur_id, self._cur_level
-        root = self.engine._tier_root(level)
+        plan = self.pipeline.plan_external(ckpt_id, level,
+                                           extra_meta={"file_mode": True})
         if not valid:
-            mf.abort(root, ckpt_id)
+            mf.abort(plan.root, ckpt_id)
             return None
-        d = mf.ckpt_dir(root, ckpt_id, tmp=True)
+        d = mf.ckpt_dir(plan.root, ckpt_id, tmp=True)
         nbytes = sum(os.path.getsize(p) for p in
                      (os.path.join(d, f) for f in os.listdir(d))
                      if os.path.isfile(p))
-        # redundancy on the routed files
-        if level == 2:
-            for path in self._routed.values():
-                replicate(self.comm, self.engine.topo, ckpt_id,
-                          open(path, "rb").read())
-            self.comm.barrier()
-            store_partner_copy(self.comm, self.engine.topo, ckpt_id, d)
-        elif level == 3:
-            path = next(iter(self._routed.values()))
-            self.engine._erasure_encode(ckpt_id, d, path)
-        statuses = self.comm.allgather(
-            {"rank": self.comm.rank, "ok": True, "nbytes": nbytes})
-        mf.write_manifest(root, ckpt_id, {
-            "kind": CHK_FULL, "level": level, "world": self.comm.world,
-            "ranks": statuses, "file_mode": True,
-        })
-        mf.commit(root, ckpt_id, keep_last=self.cfg.keep_last_full)
+        payload = next(iter(self._routed.values()), os.path.join(
+            d, f"rank{self.comm.rank}.chk5"))
+        rep = self.pipeline.finish_external(plan, payload, nbytes)
         self.stats["stores"] += 1
         self.stats["bytes"] += nbytes
-        return StoreReport(ckpt_id, level, CHK_FULL, nbytes, 0.0)
+        return rep
 
     def have_restart(self) -> Optional[int]:
         ids = self.engine.available_ids()
@@ -134,9 +124,9 @@ class SCRBackend(Backend):
         cid = self.start_restart()
         if cid is None:
             return None
-        path = self.route_file("openchk.chk5")
-        blob = self.engine._rank_payload(self._restart_src[0], cid,
-                                         self.comm.rank)
+        self.route_file("openchk.chk5")
+        blob = self.engine.rank_payload(self._restart_src[0], cid,
+                                        self.comm.rank)
         if blob is None:
             self.complete_restart(False)
             return None
@@ -147,3 +137,4 @@ class SCRBackend(Backend):
         rd.close()
         self.complete_restart(True)
         return named
+    # tcl_wait / tcl_finalize: inherited no-op fence (no CP thread)

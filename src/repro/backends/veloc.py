@@ -5,7 +5,8 @@ checkpoint_wait / restart_test / restart``. Async by design (the paper's
 §4.2.2 is supported here and in FTI); **no checkpoint kinds** — a CHK_DIFF
 request falls back to FULL and is counted in stats (paper §3: "VeloC is
 still missing some features ... e.g. different checkpointing types").
-Two tiers: scratch (node-local, level ≤3 → 1) and persistent (level 4).
+Two tiers: scratch (node-local, level ≤3) and persistent (level 4); both
+are the shared pipeline's tier stacks — VeloC adds no placement code.
 """
 from __future__ import annotations
 
@@ -14,7 +15,6 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.backends.base import Backend
-from repro.core.async_engine import CPDedicatedThread
 from repro.core.comm import Communicator
 from repro.core.storage import CHK_FULL, StorageConfig, StoreReport
 
@@ -26,15 +26,16 @@ class VeloCBackend(Backend):
     name = "veloc"
     supports_diff = False
     supports_dedicated_thread = True
+    supports_incremental = True
     max_level = 4
 
     def __init__(self, cfg: StorageConfig, comm: Communicator,
-                 mode: str = "memory"):
-        super().__init__(cfg, comm)
+                 mode: str = "memory",
+                 dedicated_thread: bool = True):
+        super().__init__(cfg, comm, dedicated_thread=dedicated_thread)
         assert mode in ("memory", "file")
         self.mode = mode
         self._protected: Dict[int, Tuple[str, np.ndarray]] = {}
-        self._cp = CPDedicatedThread()
 
     # ----------------------- native VeloC-style API -------------------- #
 
@@ -46,13 +47,11 @@ class VeloCBackend(Backend):
         named = {f"p{pid}/{n}": np.asarray(a)
                  for pid, (n, a) in self._protected.items()}
         level = 1 if self.mode == "memory" else 4
-        self._cp.check_errors()
-        self._cp.submit(version, lambda: self._store(named, version, level))
+        self.tcl_store(named, version, level, CHK_FULL)
         return VELOC_SUCCESS
 
     def checkpoint_wait(self) -> int:
-        self._cp.wait()
-        self._cp.check_errors()
+        self.tcl_wait()
         return VELOC_SUCCESS
 
     def restart_test(self, name: str, version: int = 0) -> int:
@@ -75,34 +74,3 @@ class VeloCBackend(Backend):
 
     def recovered(self, pid: int) -> np.ndarray:
         return self._protected[pid][1]
-
-    # ----------------------- TCL uniform surface ----------------------- #
-
-    def _store(self, named, ckpt_id, level) -> StoreReport:
-        rep = self.engine.store(named, ckpt_id, level, CHK_FULL,
-                                diff_supported=False)
-        self.stats["stores"] += 1
-        self.stats["bytes"] += rep.bytes_payload
-        return rep
-
-    def tcl_store(self, named, ckpt_id, level, kind) -> Optional[StoreReport]:
-        if kind != CHK_FULL:
-            self.stats["diff_fallbacks"] += 1
-        self._cp.check_errors()
-        self._cp.submit(ckpt_id,
-                        lambda: self._store(named, ckpt_id, min(level, 4)))
-        return None
-
-    def tcl_load(self):
-        self.checkpoint_wait()
-        got = self.engine.load_latest()
-        if got is None:
-            return None
-        self.stats["loads"] += 1
-        return got[0]
-
-    def tcl_wait(self) -> None:
-        self.checkpoint_wait()
-
-    def tcl_finalize(self) -> None:
-        self._cp.shutdown()

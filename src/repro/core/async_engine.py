@@ -1,9 +1,15 @@
 """CP-dedicated threads (paper §4.2.2).
 
-One thread per host does all checkpoint work — serialization, redundancy,
-I/O — while the accelerator keeps computing. The only synchronous cost on
-the training thread is the device→host snapshot (and, for CHK_DIFF, the
-on-device hash/pack which runs at HBM bandwidth).
+One thread per host runs the checkpoint pipeline's Pack → Place → Commit
+tail — serialization, redundancy, I/O — while the accelerator keeps
+computing.  The Plan stage always stays on the training thread, in
+submission order; that is the only synchronous cost: the device→host
+snapshot, plus — on diff-capable backends — the on-device blockhash/pack
+at HBM bandwidth that keeps the digest chain current (clean leaves are
+skipped via the identity cache; backends without checkpoint kinds skip
+digest bookkeeping entirely).  FULL, DIFF and incremental stores all go
+through the same queue, so they compose and serialize correctly against
+each other.
 
 FTI semantics for errors: a failed asynchronous store does not raise at the
 original ``store()`` call; it is surfaced at the *next* directive (store /

@@ -73,7 +73,9 @@ class CheckpointContext:
         self.comm = comm if comm is not None else LocalComm(
             os.path.join(cfg.dir, "node-local"))
         backend_kw = {}
-        if cfg.backend in (None, "fti") and not cfg.dedicated_thread:
+        # every backend accepts the CP-thread switch (base Backend ANDs it
+        # with the declared capability, so it is a no-op where unsupported)
+        if not cfg.dedicated_thread:
             backend_kw["dedicated_thread"] = False
         self.tcl = TCL(cfg.storage(), self.comm, cfg.backend, **backend_kw)
         self.cfg = cfg
@@ -117,14 +119,15 @@ class CheckpointContext:
                     if_: bool = True):
         """Incremental checkpointing (paper §8 Future Work): open a
         checkpoint and ``add`` parts as they become ready; ``commit``
-        finalizes (manifest + redundancy). Returns None when ``if_`` is
-        false (switch-off clause, like store)."""
+        finalizes (manifest + redundancy) through the pipeline's
+        Place → Commit stages — asynchronously when the backend has a
+        CP-dedicated thread (no fence against in-flight stores: the CP
+        queue serializes commits, and parts stage into a private ``.tmp``
+        dir). Returns None when ``if_`` is false (switch-off clause)."""
         self._check_open()
         if not if_:
             return None
-        from repro.core.incremental import IncrementalStore
-        self.tcl.wait()                    # order vs in-flight async stores
-        return IncrementalStore(self.tcl.backend.engine, int(id), int(level))
+        return self.tcl.store_begin(int(id), int(level))
 
     def wait(self) -> None:
         """Fence any CP-dedicated-thread work (surfaces deferred errors)."""

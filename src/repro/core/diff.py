@@ -3,8 +3,19 @@
 Per protected leaf, a 64-bit digest per ``block_bytes`` block is kept from
 the previous checkpoint. On a CHK_DIFF store the new digests are computed
 *on device* (Pallas blockhash on TPU; jnp oracle on CPU), the dirty map is
-diffed on host (tiny), dirty blocks are compacted on device and only those
-cross to the host.
+diffed on host (tiny), dirty blocks are compacted on device by the diffpack
+kernel and only those cross to the host.
+
+Digest cache across stores: jax arrays are immutable, so a leaf that is the
+*same object* as at the previous store cannot have changed — its digests
+are reused and the blockhash kernel is skipped entirely.  Back-to-back
+differential (or full) checkpoints therefore pay hashing only for leaves
+that were actually replaced.  Identity is tracked with weakrefs (no device
+memory is pinned); mutable ``np.ndarray`` leaves are never skipped.
+
+All digest-state mutation happens in the pipeline's Plan stage, on the
+calling thread in submission order — which is what lets DIFF stores run on
+a CP-dedicated thread without racing the digest chain.
 
 Break-even guard: the paper measures differential checkpointing to pay off
 below a ~95 % dirty ratio (Fig. 7). When the observed ratio exceeds
@@ -16,7 +27,8 @@ buffers, then bit-cast back to the leaf dtype/shape.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import weakref
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -44,11 +56,29 @@ class DiffStats:
     total_blocks: int = 0
     dirty_blocks: int = 0
     bytes_written: int = 0
+    skipped_leaves: int = 0      # clean by identity — hash kernel not run
     promoted_full: bool = False
 
     @property
     def dirty_ratio(self) -> float:
         return self.dirty_blocks / max(1, self.total_blocks)
+
+
+def _pack_dirty_blocks(leaf: Any, dirty: np.ndarray,
+                       block_bytes: int) -> np.ndarray:
+    """Compact the dirty blocks on device via the diffpack kernel.
+
+    ``pack_dirty`` jits on a static dirty count, so the index vector is
+    padded to the next power of two (bounded number of compiled variants)
+    and the result sliced host-side."""
+    n_dirty = int(dirty.shape[0])
+    n_pad = 1
+    while n_pad < n_dirty:
+        n_pad *= 2
+    idx = np.zeros(n_pad, np.int32)
+    idx[:n_dirty] = dirty
+    packed = ops.pack_dirty(leaf, jnp.asarray(idx), n_pad, block_bytes)
+    return np.asarray(packed)[:n_dirty]
 
 
 class DiffEngine:
@@ -57,16 +87,51 @@ class DiffEngine:
         self.block_bytes = block_bytes
         self.promote_threshold = promote_threshold
         self._digests: Dict[str, np.ndarray] = {}
+        self._clean_refs: Dict[str, "weakref.ref"] = {}
+        self.epoch = 0       # bumped on invalidate(); DIFF plans check it
 
     # ------------------------------------------------------------------ #
 
     def reset(self) -> None:
         self._digests.clear()
+        self._clean_refs.clear()
+
+    def invalidate(self, paths) -> None:
+        """Drop digest state for ``paths`` (a store of them failed after the
+        chain advanced).  Conservative and safe: the next DIFF sees no base
+        for these leaves, marks every block dirty, and the promote guard
+        turns that into a FULL — never a delta against phantom data."""
+        paths = list(paths)
+        for p in paths:
+            self._digests.pop(p, None)
+            self._clean_refs.pop(p, None)
+        if paths:
+            self.epoch += 1
+
+    def _is_clean(self, path: str, leaf: Any) -> bool:
+        """Same immutable array object as the previous store → unchanged."""
+        ref = self._clean_refs.get(path)
+        return (ref is not None and ref() is leaf
+                and path in self._digests)
+
+    def _remember(self, path: str, leaf: Any) -> None:
+        # only immutable arrays make identity a valid clean signal
+        if isinstance(leaf, jax.Array) and not isinstance(leaf, np.ndarray):
+            try:
+                self._clean_refs[path] = weakref.ref(leaf)
+                return
+            except TypeError:
+                pass
+        self._clean_refs.pop(path, None)
 
     def update_digests_full(self, named: Dict[str, Any]) -> None:
         """After a FULL store: record digests so the next DIFF has a base."""
         for path, leaf in named.items():
-            self._digests[path] = np.asarray(ops.blockhash(leaf, self.block_bytes))
+            if self._is_clean(path, leaf):
+                continue
+            self._digests[path] = np.asarray(
+                ops.blockhash(leaf, self.block_bytes))
+            self._remember(path, leaf)
 
     def compute_deltas(self, named: Dict[str, Any]
                        ) -> Tuple[Optional[List[LeafDelta]], DiffStats]:
@@ -74,14 +139,24 @@ class DiffEngine:
         stats = DiffStats()
         pending: List[Tuple[str, Any, np.ndarray, np.ndarray]] = []
         for path, leaf in named.items():
-            h_new = np.asarray(ops.blockhash(leaf, self.block_bytes))
-            dirty = ops.dirty_indices(h_new, self._digests.get(path))
+            if self._is_clean(path, leaf):
+                h_new = self._digests[path]
+                dirty = np.zeros(0, np.int32)
+                stats.skipped_leaves += 1
+            else:
+                h_new = np.asarray(ops.blockhash(leaf, self.block_bytes))
+                dirty = ops.dirty_indices(h_new, self._digests.get(path))
             stats.total_blocks += h_new.shape[0]
             stats.dirty_blocks += int(dirty.shape[0])
             pending.append((path, leaf, h_new, dirty))
 
         if stats.dirty_ratio > self.promote_threshold:
             stats.promoted_full = True
+            # the promoted FULL store persists exactly these leaves — commit
+            # the already-computed digests so the caller need not re-hash
+            for path, leaf, h_new, _dirty in pending:
+                self._digests[path] = h_new
+                self._remember(path, leaf)
             return None, stats
 
         deltas = []
@@ -89,8 +164,7 @@ class DiffEngine:
             if dirty.shape[0] == 0:
                 payload = np.zeros((0, self.block_bytes // 4), np.uint32)
             else:
-                blocks, _ = ops.as_u32_blocks(leaf, self.block_bytes)
-                payload = np.asarray(jnp.take(blocks, jnp.asarray(dirty), axis=0))
+                payload = _pack_dirty_blocks(leaf, dirty, self.block_bytes)
             stats.bytes_written += payload.nbytes
             deltas.append(LeafDelta(
                 path=path,
@@ -103,6 +177,8 @@ class DiffEngine:
             ))
         for d in deltas:
             self._digests[d.path] = d.digests
+        for path, leaf, _h, _d in pending:
+            self._remember(path, leaf)
         return deltas, stats
 
 

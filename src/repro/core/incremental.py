@@ -18,6 +18,14 @@ API (directive-style)::
     inc.add(new_params,  prefix="params")
     inc.commit()                                 # manifest + redundancy
 
+An incremental store is a pipeline store whose Pack stage is spread over
+time by the caller: ``add`` appends parts to the staged container, and
+``commit`` runs the ordinary Place → Commit tail — so level-2/3
+incremental checkpoints get exactly the same partner/erasure redundancy as
+monolithic ones, and on a backend with a CP-dedicated thread the tail runs
+asynchronously (``commit`` then returns None; errors surface at the next
+directive, like any async store).
+
 The container stays uncommitted (``.tmp``) until ``commit``; a crash
 mid-build leaves no restorable-but-partial checkpoint (same atomicity as
 regular stores — tests/test_incremental.py).
@@ -38,15 +46,20 @@ from repro.core.storage import CHK_FULL, StorageEngine, StoreReport
 
 class IncrementalStore:
     def __init__(self, engine: StorageEngine, ckpt_id: int, level: int,
-                 extra_meta: Optional[Dict[str, Any]] = None):
+                 extra_meta: Optional[Dict[str, Any]] = None,
+                 cp=None, stats: Optional[Dict[str, Any]] = None):
         self.engine = engine
+        self.pipeline = engine.pipeline
         self.ckpt_id = ckpt_id
-        self.level = max(1, min(4, level))
         self.extra_meta = dict(extra_meta or {})
+        self._cp = cp                       # backend's CP-dedicated thread
+        self._stats = stats
         self._t0 = time.time()
-        root = engine._tier_root(self.level)
-        self._root = root
-        d = mf.begin(root, ckpt_id)
+        self._plan = self.pipeline.plan_external(
+            ckpt_id, level, extra_meta=dict(self.extra_meta,
+                                            incremental=True))
+        self.level = self._plan.level
+        d = mf.begin(self._plan.root, ckpt_id)
         self._path = os.path.join(d, f"rank{engine.comm.rank}.chk5")
         self._writer = CHK5Writer(self._path)
         self._writer.set_attrs("", dict(self.extra_meta, kind=CHK_FULL,
@@ -75,35 +88,41 @@ class IncrementalStore:
     def abort(self) -> None:
         if not self._committed:
             self._writer.close()
-            mf.abort(self._root, self.ckpt_id)
+            mf.abort(self._plan.root, self.ckpt_id)
             self._committed = True
 
-    def commit(self) -> StoreReport:
-        """Close the container, apply level redundancy, commit atomically."""
+    def commit(self) -> Optional[StoreReport]:
+        """Close the container, then run the pipeline's Place → Commit tail
+        (level redundancy + atomic manifest commit).
+
+        Synchronous backend: returns the StoreReport.  With a CP-dedicated
+        thread the tail runs asynchronously and commit returns None."""
         assert not self._committed
+        if self._cp is not None:
+            # surface deferred failures BEFORE closing the writer or
+            # touching the digest chain: on raise, this store stays
+            # uncommitted and commit() can be retried
+            self._cp.check_errors()
         self._writer.close()
-        nbytes = os.path.getsize(self._path)
-        eng = self.engine
-        d = mf.ckpt_dir(self._root, self.ckpt_id, tmp=True)
-        if self.level == 2:
-            from repro.redundancy.partner import replicate, store_partner_copy
-            replicate(eng.comm, eng.topo, self.ckpt_id,
-                      open(self._path, "rb").read())
-            eng.comm.barrier()
-            store_partner_copy(eng.comm, eng.topo, self.ckpt_id, d)
-        elif self.level == 3:
-            eng._erasure_encode(self.ckpt_id, d, self._path)
-        statuses = eng.comm.allgather(
-            {"rank": eng.comm.rank, "ok": True, "nbytes": nbytes})
-        mf.write_manifest(self._root, self.ckpt_id, {
-            "kind": CHK_FULL, "level": self.level, "world": eng.comm.world,
-            "incremental": True, "parts": self._names,
-            "ranks": statuses, **self.extra_meta,
-        })
-        mf.commit(self._root, self.ckpt_id, keep_last=0)
-        eng._prune_chains(self._root)
-        # keep the diff engine's digests coherent for subsequent CHK_DIFF
-        eng.diff.update_digests_full(self._named_all)
         self._committed = True
-        return StoreReport(self.ckpt_id, self.level, CHK_FULL, nbytes,
-                           time.time() - self._t0)
+        nbytes = os.path.getsize(self._path)
+        # digest coherence for subsequent CHK_DIFF stores — on the calling
+        # thread, so an immediately following DIFF plan sees this base
+        self.pipeline.diff.update_digests_full(self._named_all)
+        plan = self._plan
+        plan.extra["parts"] = list(self._names)
+        # report seconds = build time (begin→commit) + tail work, but not
+        # time spent waiting in the CP queue behind other stores
+        plan.plan_seconds = time.time() - self._t0
+
+        def tail() -> StoreReport:
+            rep = self.pipeline.finish_external(plan, self._path, nbytes)
+            if self._stats is not None:
+                self._stats["stores"] += 1
+                self._stats["bytes"] += rep.bytes_payload
+            return rep
+
+        if self._cp is not None:
+            self._cp.submit(self.ckpt_id, tail)
+            return None
+        return tail()

@@ -1,0 +1,491 @@
+"""The staged checkpoint pipeline: Plan → Pack → Place → Commit.
+
+Every store — synchronous or CP-dedicated-thread, FULL, DIFF or
+incremental, any backend — flows through the same four stages:
+
+    Plan    kind/level resolution, the diff→full promote decision, and the
+            only work that must stay on the calling thread: the device→host
+            snapshot and (for CHK_DIFF) the on-device blockhash/diffpack
+            kernels.  Runs in submission order, so back-to-back asynchronous
+            DIFF stores see a consistent digest chain.
+    Pack    serialization of the planned payload into the staging dir
+            (``ckpt-<id>.tmp``) as a CHK5 container.
+    Place   the tier stack for the level applies redundancy
+            (partner replica, erasure parity, …) — see core/tiers.py.
+    Commit  per-rank status allgather, manifest write, atomic ``.tmp`` →
+            final rename, diff-chain-aware retention pruning.
+
+``plan()`` is cheap and synchronous; ``finish()`` (= pack + place + commit)
+is the asynchronous tail a CP-dedicated thread runs.  File-mode backends
+(SCR ``route_file``) and incremental stores that produced their payload
+outside Pack enter at Place via ``finish_external()`` — so *no* caller
+re-implements placement or commit.
+
+Restart search order: L1 → L2 (partner) → L3 (erasure reconstruct) → L4,
+newest checkpoint id first — exactly FTI's recovery ladder, now expressed
+as iteration over the tier ladder (the tier that produced the payload is
+reported as ``recovered_via`` in the restored metadata).
+"""
+from __future__ import annotations
+
+import io
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import manifest as mf
+from repro.core.comm import Communicator
+from repro.core.diff import (
+    DiffEngine,
+    LeafDelta,
+    apply_delta,
+    dtype_str,
+    leaf_to_u32_flat,
+    u32_flat_to_leaf,
+)
+from repro.core.formats import CHK5Reader, CHK5Writer
+from repro.core.protect import to_host
+from repro.core.tiers import (
+    Tier,
+    TierContext,
+    default_tier_stacks,
+    recovery_ladder,
+)
+from repro.redundancy.groups import Topology
+
+CHK_FULL = "FULL"
+CHK_DIFF = "DIFF"
+
+
+@dataclass
+class StorageConfig:
+    root: str                                  # base dir for this run
+    block_bytes: int = 65_536
+    keep_last_full: int = 2
+    group_size: int = 4
+    erasure_scheme: str = "rs"                 # "rs" | "xor"
+    rs_parity: int = 2
+    promote_threshold: float = 0.95            # diff→full break-even (Fig. 7)
+    ranks_per_node: int = 1
+    custom_groups: Optional[dict] = None       # SCR-style group overrides
+
+    @property
+    def global_root(self) -> str:
+        return os.path.join(self.root, "global")
+
+
+@dataclass
+class StoreReport:
+    ckpt_id: int
+    level: int
+    kind: str
+    bytes_payload: int
+    seconds: float
+    dirty_ratio: Optional[float] = None
+    promoted_full: bool = False
+
+
+@dataclass
+class StoreRequest:
+    """What the caller wants checkpointed (input to Plan)."""
+    named: Dict[str, Any]                      # device or host arrays
+    ckpt_id: int
+    level: int
+    kind: str = CHK_FULL
+    extra_meta: Optional[Dict[str, Any]] = None
+    diff_supported: bool = True
+
+
+@dataclass
+class Plan:
+    """Resolved store decision (output of Plan, input to Pack/Place/Commit).
+
+    After ``plan()`` returns, the checkpoint content is frozen host-side
+    (FULL: host snapshot; DIFF: compacted dirty blocks) — the remaining
+    stages touch no device state and may run on a CP-dedicated thread."""
+    ckpt_id: int
+    level: int
+    kind: str
+    tiers: List[Tier]
+    root: str
+    attrs: Dict[str, Any]                      # payload container attrs
+    extra: Dict[str, Any]                      # caller meta → manifest
+    named_host: Optional[Dict[str, np.ndarray]] = None   # FULL payload
+    deltas: Optional[List[LeafDelta]] = None             # DIFF payload
+    dirty_ratio: Optional[float] = None
+    promoted_full: bool = False
+    t0: float = field(default_factory=time.time)
+    plan_seconds: float = 0.0          # time spent in plan() itself
+    digest_epoch: int = -1             # DIFF only: chain epoch at plan time
+
+
+@dataclass
+class Packed:
+    """A serialized payload sitting in the staging dir (output of Pack)."""
+    stage_dir: str
+    path: str
+    nbytes: int
+
+
+class CheckpointPipeline:
+    def __init__(self, cfg: StorageConfig, comm: Communicator,
+                 compose=None):
+        self.cfg = cfg
+        self.comm = comm
+        self.topo = Topology(
+            world=comm.world,
+            ranks_per_node=cfg.ranks_per_node,
+            group_size=min(cfg.group_size, comm.world),
+            custom_groups=cfg.custom_groups,
+        )
+        self.ctx = TierContext(cfg, comm, self.topo)
+        self.diff = DiffEngine(cfg.block_bytes, cfg.promote_threshold)
+        self.stacks: Dict[int, List[Tier]] = (
+            compose or default_tier_stacks)(self.ctx)
+        self.ladder: List[Tier] = recovery_ladder(self.stacks)
+        os.makedirs(self.ctx.local_root, exist_ok=True)
+        os.makedirs(cfg.global_root, exist_ok=True)
+
+    # ------------------------------------------------------------------ #
+
+    @property
+    def local_root(self) -> str:
+        return self.ctx.local_root
+
+    def clamp_level(self, level: int) -> int:
+        """Snap to the nearest level a stack exists for (custom composers
+        may register non-contiguous levels): the deepest available level
+        not above the request, else the shallowest available."""
+        if level in self.stacks:
+            return level
+        below = [k for k in self.stacks if k <= level]
+        return max(below) if below else min(self.stacks)
+
+    def tier_stack(self, level: int) -> List[Tier]:
+        return self.stacks[self.clamp_level(level)]
+
+    def tier_root(self, level: int) -> str:
+        return self.tier_stack(level)[0].root
+
+    # ------------------------------------------------------------------ #
+    # stage 1: Plan
+    # ------------------------------------------------------------------ #
+
+    def plan(self, req: StoreRequest) -> Plan:
+        """Resolve kind/level, run the on-device diff kernels, snapshot to
+        host.  The only pipeline stage that runs on the calling thread."""
+        t_plan = time.time()
+        level = self.clamp_level(req.level)
+        tiers = self.tier_stack(level)
+        kind = req.kind
+        extra = dict(req.extra_meta or {})
+        attrs: Dict[str, Any] = dict(extra)
+        deltas = None
+        named_host = None
+        dirty_ratio = None
+        promoted = False
+
+        if kind == CHK_DIFF and not req.diff_supported:
+            kind = CHK_FULL                 # VeloC/SCR: no checkpoint kinds
+            attrs["diff_fallback"] = True
+        # epoch read BEFORE delta computation: an invalidate() racing in
+        # from a CP-thread failure mid-plan must make finish() refuse this
+        # delta, not slip past the guard
+        epoch = self.diff.epoch
+        if kind == CHK_DIFF:
+            deltas, stats = self.diff.compute_deltas(req.named)
+            dirty_ratio = stats.dirty_ratio
+            if deltas is None:              # above break-even: promote
+                kind = CHK_FULL
+                promoted = True
+            else:
+                attrs["base_required"] = True
+        if kind == CHK_FULL:
+            # skip digest bookkeeping when the backend can never consume it
+            # (no checkpoint kinds) and when the promote path just computed
+            # exactly these digests — both would be wasted synchronous
+            # full-tree hashing on the training thread
+            if req.diff_supported and not promoted:
+                self.diff.update_digests_full(req.named)
+            named_host = to_host(req.named)
+
+        return Plan(ckpt_id=req.ckpt_id, level=level, kind=kind, tiers=tiers,
+                    root=tiers[0].root, attrs=attrs, extra=extra,
+                    named_host=named_host, deltas=deltas,
+                    dirty_ratio=dirty_ratio, promoted_full=promoted,
+                    plan_seconds=time.time() - t_plan,
+                    digest_epoch=epoch if kind == CHK_DIFF else -1)
+
+    def plan_external(self, ckpt_id: int, level: int,
+                      extra_meta: Optional[Dict[str, Any]] = None) -> Plan:
+        """Plan for a payload produced outside Pack (file-mode backends,
+        incremental stores).  Kind is FULL: the container holds a complete
+        restorable snapshot of whatever was routed/added."""
+        level = self.clamp_level(level)
+        tiers = self.tier_stack(level)
+        extra = dict(extra_meta or {})
+        return Plan(ckpt_id=ckpt_id, level=level, kind=CHK_FULL, tiers=tiers,
+                    root=tiers[0].root, attrs=dict(extra), extra=extra)
+
+    # ------------------------------------------------------------------ #
+    # stage 2: Pack
+    # ------------------------------------------------------------------ #
+
+    def pack(self, plan: Plan) -> Packed:
+        """Serialize the planned payload into the staging dir."""
+        d = mf.begin(plan.root, plan.ckpt_id)
+        path = os.path.join(d, f"rank{self.comm.rank}.chk5")
+        attrs = dict(plan.attrs, level=plan.level, rank=self.comm.rank,
+                     world=self.comm.world)
+        if plan.kind == CHK_DIFF:
+            nbytes = self._serialize_diff(plan.deltas, attrs, path)
+        else:
+            nbytes = self._serialize_full(plan.named_host, attrs, path)
+        return Packed(stage_dir=d, path=path, nbytes=nbytes)
+
+    def _serialize_full(self, named: Dict[str, np.ndarray],
+                        attrs: Dict[str, Any], path: str) -> int:
+        with CHK5Writer(path) as w:
+            w.set_attrs("", dict(attrs, kind=CHK_FULL))
+            for name, arr in named.items():
+                w.write_dataset(f"data/{name}", np.asarray(arr),
+                                {"dtype": dtype_str(arr.dtype)})
+        return os.path.getsize(path)
+
+    def _serialize_diff(self, deltas: List[LeafDelta],
+                        attrs: Dict[str, Any], path: str) -> int:
+        with CHK5Writer(path) as w:
+            w.set_attrs("", dict(attrs, kind=CHK_DIFF))
+            for d in deltas:
+                g = f"delta/{d.path}"
+                w.write_dataset(f"{g}/idx", d.dirty_idx)
+                w.write_dataset(f"{g}/blocks", d.payload)
+                w.write_dataset(
+                    f"{g}/digest", d.digests,
+                    {"dtype": d.dtype, "shape": d.shape,
+                     "n_blocks": d.n_blocks})
+        return os.path.getsize(path)
+
+    # ------------------------------------------------------------------ #
+    # stage 3: Place
+    # ------------------------------------------------------------------ #
+
+    def place(self, plan: Plan, packed: Packed) -> None:
+        """Run the tier stack's redundancy over the packed payload."""
+        for tier in plan.tiers:
+            tier.place(plan.ckpt_id, packed.stage_dir, packed.path)
+
+    # ------------------------------------------------------------------ #
+    # stage 4: Commit
+    # ------------------------------------------------------------------ #
+
+    def commit(self, plan: Plan, packed: Packed) -> StoreReport:
+        """Status allgather + manifest + atomic rename + retention.
+
+        (Rank0-equivalent; every rank writes the same manifest data in the
+        single-process container, and commit merges idempotently.)"""
+        statuses = self.comm.allgather(
+            {"rank": self.comm.rank, "ok": True,
+             "file": os.path.basename(packed.path), "nbytes": packed.nbytes})
+        mf.write_manifest(plan.root, plan.ckpt_id, {
+            "kind": plan.kind, "level": plan.level, "world": self.comm.world,
+            "group_size": self.topo.group_size,
+            "erasure": self.cfg.erasure_scheme,
+            "block_bytes": self.cfg.block_bytes,
+            "ranks": statuses,
+            **plan.extra,
+        })
+        mf.commit(plan.root, plan.ckpt_id, keep_last=0)  # pruning below
+        self.prune_chains(plan.root)
+        # seconds = store work only (plan + tail), not CP-queue waiting
+        return StoreReport(plan.ckpt_id, plan.level, plan.kind, packed.nbytes,
+                           plan.plan_seconds + (time.time() - plan.t0),
+                           plan.dirty_ratio, plan.promoted_full)
+
+    # ------------------------------------------------------------------ #
+    # stage composition
+    # ------------------------------------------------------------------ #
+
+    def _plan_leaf_paths(self, plan: Plan):
+        if plan.named_host is not None:
+            return list(plan.named_host)
+        if plan.deltas is not None:
+            return [d.path for d in plan.deltas]
+        return plan.extra.get("parts", [])
+
+    def finish(self, plan: Plan) -> StoreReport:
+        """The asynchronous tail: Pack → Place → Commit.
+
+        Plan already advanced the digest chain (it must, so back-to-back
+        async DIFF stores see each other); if the tail fails, the chain now
+        describes a checkpoint that never committed — invalidate those
+        leaves so a later DIFF can't delta against phantom data."""
+        plan.t0 = time.time()       # exclude any CP-queue wait from seconds
+        try:
+            if plan.kind == CHK_DIFF and plan.digest_epoch != self.diff.epoch:
+                # a store that failed AFTER this one was planned invalidated
+                # part of the chain — this delta may reference base content
+                # that never committed; refuse rather than corrupt restores
+                raise RuntimeError(
+                    f"DIFF store {plan.ckpt_id}: digest base invalidated by "
+                    "a failed store planned before it; retry (it will "
+                    "promote to FULL)")
+            packed = self.pack(plan)
+            self.place(plan, packed)
+            return self.commit(plan, packed)
+        except BaseException:
+            self.diff.invalidate(self._plan_leaf_paths(plan))
+            raise
+
+    def finish_external(self, plan: Plan, payload_path: str,
+                        nbytes: int) -> StoreReport:
+        """Place + Commit for a payload staged outside Pack (the file was
+        already written into ``ckpt-<id>.tmp`` under ``plan.root``)."""
+        plan.t0 = time.time()       # exclude any CP-queue wait from seconds
+        packed = Packed(
+            stage_dir=mf.ckpt_dir(plan.root, plan.ckpt_id, tmp=True),
+            path=payload_path, nbytes=nbytes)
+        try:
+            self.place(plan, packed)
+            return self.commit(plan, packed)
+        except BaseException:
+            self.diff.invalidate(self._plan_leaf_paths(plan))
+            raise
+
+    def store(self, req: StoreRequest) -> StoreReport:
+        """Run all four stages synchronously."""
+        return self.finish(self.plan(req))
+
+    # ------------------------------------------------------------------ #
+    # retention: keep the last N FULLs plus the diff chain above them
+    # ------------------------------------------------------------------ #
+
+    def prune_chains(self, root: str) -> None:
+        ids = mf.list_committed(root)
+        fulls = [i for i in ids
+                 if mf.read_manifest(root, i).get("kind") == CHK_FULL]
+        keep_from = fulls[-self.cfg.keep_last_full] if len(
+            fulls) >= self.cfg.keep_last_full else (fulls[0] if fulls else None)
+        if keep_from is None:
+            return
+        for i in ids:
+            if i < keep_from:
+                import shutil
+                shutil.rmtree(mf.ckpt_dir(root, i), ignore_errors=True)
+
+    # ------------------------------------------------------------------ #
+    # read path: the recovery ladder
+    # ------------------------------------------------------------------ #
+
+    def available_ids(self) -> List[Tuple[int, str]]:
+        """All committed checkpoint ids across tiers → [(id, tier_root)].
+        Includes reachable peers' node-local tiers (a restarted rank on a
+        fresh node recovers from partner/parity held by survivors)."""
+        roots = [self.ctx.local_root, self.cfg.global_root]
+        for r in range(self.comm.world):
+            if r == self.comm.rank:
+                continue
+            peer = self.comm.peer_local_dir(r)
+            if peer is not None:
+                roots.append(os.path.join(peer, "ckpts"))
+        out = []
+        for root in roots:
+            for i in mf.list_committed(root):
+                out.append((i, root))
+        return sorted(out)
+
+    def recover_payload(self, root: str, ckpt_id: int, rank: int
+                        ) -> Optional[Tuple[bytes, Dict, str]]:
+        """Walk the tier ladder L1 → L4 for one rank payload.
+        Returns (payload, manifest, tier_name) or None."""
+        try:
+            man = mf.read_manifest(root, ckpt_id)
+        except OSError:
+            man = {}
+        dirs = self.ctx.recovery_dirs(root, ckpt_id)   # scanned once, shared
+        for tier in self.ladder:
+            blob = tier.recover(ckpt_id, rank, root, man, dirs)
+            if blob is not None:
+                return blob, man, tier.name
+        return None
+
+    def load_latest(self, rank: Optional[int] = None
+                    ) -> Optional[Tuple[Dict[str, np.ndarray], Dict[str, Any]]]:
+        """Restore newest restorable checkpoint: FULL base + diff replay."""
+        rank = self.comm.rank if rank is None else rank
+        by_id: Dict[int, List[str]] = {}
+        for i, root in self.available_ids():
+            by_id.setdefault(i, []).append(root)
+        for ckpt_id in sorted(by_id, reverse=True):
+            got = self._try_restore(ckpt_id, by_id, rank)
+            if got is not None:
+                return got
+        return None
+
+    def _read_payload_any_tier(self, ckpt_id: int, by_id, rank: int
+                               ) -> Optional[Tuple[bytes, Dict, str]]:
+        for root in by_id.get(ckpt_id, []):
+            got = self.recover_payload(root, ckpt_id, rank)
+            if got is not None:
+                return got
+        return None
+
+    def _try_restore(self, ckpt_id: int, by_id, rank: int):
+        # walk back to the base FULL
+        chain: List[Tuple[bytes, Dict]] = []
+        via = None
+        cur = ckpt_id
+        while True:
+            got = self._read_payload_any_tier(cur, by_id, rank)
+            if got is None:
+                return None
+            blob, man, tier_name = got
+            if via is None:
+                via = tier_name             # how the newest link was produced
+            chain.append((blob, man))
+            if man.get("kind") == CHK_FULL:
+                break
+            prev = [i for i in by_id if i < cur]
+            if not prev:
+                return None
+            cur = max(prev)
+        chain.reverse()                     # [full, diff, diff, ...]
+
+        named: Dict[str, np.ndarray] = {}
+        flat_u32: Dict[str, np.ndarray] = {}
+        meta_shape: Dict[str, Tuple[str, List[int]]] = {}
+        bb = None
+        for blob, man in chain:
+            bb = man.get("block_bytes", self.cfg.block_bytes)
+            rd = CHK5Reader(io.BytesIO(blob))
+            if man.get("kind") == CHK_FULL:
+                for ds in rd.datasets():
+                    if ds.startswith("data/"):
+                        name = ds[len("data/"):]
+                        named[name] = rd.read_dataset(ds)
+                flat_u32.clear()
+            else:
+                for ds in rd.datasets():
+                    if not ds.endswith("/digest"):
+                        continue
+                    name = ds[len("delta/"): -len("/digest")]
+                    info = rd.info(ds)["attrs"]
+                    idx = rd.read_dataset(f"delta/{name}/idx")
+                    blocks = rd.read_dataset(f"delta/{name}/blocks")
+                    if name not in flat_u32:
+                        if name not in named:
+                            return None     # chain broken
+                        flat_u32[name] = leaf_to_u32_flat(named[name], bb)
+                        meta_shape[name] = (info["dtype"], info["shape"])
+                    flat_u32[name] = apply_delta(flat_u32[name], idx, blocks, bb)
+                    meta_shape[name] = (info["dtype"], info["shape"])
+            rd.close()
+        for name, buf in flat_u32.items():
+            dt, shp = meta_shape[name]
+            named[name] = u32_flat_to_leaf(buf, dt, shp)
+        final_meta = dict(chain[-1][1], recovered_via=via)
+        return named, final_meta
+

@@ -1,5 +1,6 @@
-"""Multi-level checkpoint storage engine (shared by the FTI/SCR/VeloC
-backends — they differ in API surface and feature set, not in plumbing).
+"""Multi-level checkpoint storage engine — a thin facade over the staged
+checkpoint pipeline (core/pipeline.py: Plan → Pack → Place → Commit) and
+the tier ladder (core/tiers.py: Local/Partner/Erasure/Global).
 
 Levels (paper §4.2.1 / FTI semantics):
   L1  node-local write (RAM-disk / NVMe analogue)
@@ -13,456 +14,82 @@ newest checkpoint id first — exactly FTI's recovery ladder.
 All writes go through the manifest commit protocol (atomic rename); payloads
 are CHK5 containers, so every checkpoint is also an analyzable dataset
 (§4.2.4).
+
+``StorageEngine`` keeps the historical call surface (``store`` /
+``load_latest`` / ``available_ids``) for tests, tools and benchmarks;
+backends drive the pipeline stages directly (backends/base.py) so that
+async, DIFF and incremental stores all compose through the same path.
 """
 from __future__ import annotations
 
-import io
-import os
-import time
-from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import manifest as mf
 from repro.core.comm import Communicator
-from repro.core.diff import (
-    DiffEngine,
-    LeafDelta,
-    apply_delta,
-    dtype_str,
-    leaf_to_u32_flat,
-    str_dtype,
-    u32_flat_to_leaf,
-)
-from repro.core.formats import CHK5CorruptionError, CHK5Reader, CHK5Writer
-from repro.redundancy import erasure
-from repro.redundancy.groups import Topology
-from repro.redundancy.partner import (
-    find_partner_copy,
-    partner_tag,
-    replicate,
-    store_partner_copy,
+from repro.core.pipeline import (           # re-exported for compatibility
+    CHK_DIFF,
+    CHK_FULL,
+    CheckpointPipeline,
+    Packed,
+    Plan,
+    StorageConfig,
+    StoreReport,
+    StoreRequest,
 )
 
-CHK_FULL = "FULL"
-CHK_DIFF = "DIFF"
-
-
-@dataclass
-class StorageConfig:
-    root: str                                  # base dir for this run
-    block_bytes: int = 65_536
-    keep_last_full: int = 2
-    group_size: int = 4
-    erasure_scheme: str = "rs"                 # "rs" | "xor"
-    rs_parity: int = 2
-    promote_threshold: float = 0.95            # diff→full break-even (Fig. 7)
-    ranks_per_node: int = 1
-    custom_groups: Optional[dict] = None       # SCR-style group overrides
-
-    @property
-    def global_root(self) -> str:
-        return os.path.join(self.root, "global")
-
-
-@dataclass
-class StoreReport:
-    ckpt_id: int
-    level: int
-    kind: str
-    bytes_payload: int
-    seconds: float
-    dirty_ratio: Optional[float] = None
-    promoted_full: bool = False
+__all__ = ["CHK_FULL", "CHK_DIFF", "StorageConfig", "StoreReport",
+           "StoreRequest", "StorageEngine"]
 
 
 class StorageEngine:
-    def __init__(self, cfg: StorageConfig, comm: Communicator):
+    """Facade: one object exposing the pipeline's write/read path."""
+
+    def __init__(self, cfg: StorageConfig, comm: Communicator,
+                 compose=None):
         self.cfg = cfg
         self.comm = comm
-        self.topo = Topology(
-            world=comm.world,
-            ranks_per_node=cfg.ranks_per_node,
-            group_size=min(cfg.group_size, comm.world),
-            custom_groups=cfg.custom_groups,
-        )
-        self.diff = DiffEngine(cfg.block_bytes, cfg.promote_threshold)
-        os.makedirs(self.local_root, exist_ok=True)
-        os.makedirs(cfg.global_root, exist_ok=True)
+        self.pipeline = CheckpointPipeline(cfg, comm, compose=compose)
+        self.topo = self.pipeline.topo
+        self.diff = self.pipeline.diff
 
     # ------------------------------------------------------------------ #
 
     @property
     def local_root(self) -> str:
-        return os.path.join(self.comm.node_local_dir, "ckpts")
+        return self.pipeline.local_root
 
-    def _tier_root(self, level: int) -> str:
-        return self.cfg.global_root if level >= 4 else self.local_root
+    def tier_root(self, level: int) -> str:
+        """Root dir of the write stack's primary tier for ``level``."""
+        return self.pipeline.tier_root(level)
 
     # ------------------------------------------------------------------ #
-    # write path
+    # write path — Plan → Pack → Place → Commit, run synchronously
     # ------------------------------------------------------------------ #
-
-    def _serialize_full(self, named: Dict[str, np.ndarray],
-                        meta: Dict[str, Any], path: str) -> int:
-        with CHK5Writer(path) as w:
-            w.set_attrs("", dict(meta, kind=CHK_FULL))
-            for name, arr in named.items():
-                w.write_dataset(f"data/{name}", np.asarray(arr),
-                                {"dtype": dtype_str(arr.dtype)})
-        return os.path.getsize(path)
-
-    def _serialize_diff(self, deltas: List[LeafDelta],
-                        meta: Dict[str, Any], path: str) -> int:
-        with CHK5Writer(path) as w:
-            w.set_attrs("", dict(meta, kind=CHK_DIFF))
-            for d in deltas:
-                g = f"delta/{d.path}"
-                w.write_dataset(f"{g}/idx", d.dirty_idx)
-                w.write_dataset(f"{g}/blocks", d.payload)
-                w.write_dataset(
-                    f"{g}/digest", d.digests,
-                    {"dtype": d.dtype, "shape": d.shape,
-                     "n_blocks": d.n_blocks})
-        return os.path.getsize(path)
 
     def store(self, named_host: Dict[str, np.ndarray], ckpt_id: int,
               level: int, kind: str = CHK_FULL,
               extra_meta: Optional[Dict[str, Any]] = None,
               diff_supported: bool = True) -> StoreReport:
-        """Coordinated store of this rank's (host-side) protected data."""
-        t0 = time.time()
-        level = max(1, min(4, level))
-        root = self._tier_root(level)
-        meta: Dict[str, Any] = dict(extra_meta or {}, level=level,
-                                    rank=self.comm.rank, world=self.comm.world)
-        dirty_ratio = None
-        promoted = False
-
-        d = mf.begin(root, ckpt_id)
-        path = os.path.join(d, f"rank{self.comm.rank}.chk5")
-
-        if kind == CHK_DIFF and not diff_supported:
-            kind = CHK_FULL                 # VeloC: no checkpoint kinds (§3)
-            meta["diff_fallback"] = True
-        if kind == CHK_DIFF:
-            deltas, stats = self.diff.compute_deltas(named_host)
-            dirty_ratio = stats.dirty_ratio
-            if deltas is None:
-                kind = CHK_FULL
-                promoted = True
-            else:
-                meta["base_required"] = True
-                nbytes = self._serialize_diff(deltas, meta, path)
-        if kind == CHK_FULL:
-            nbytes = self._serialize_full(named_host, meta, path)
-            self.diff.update_digests_full(named_host)
-
-        # redundancy scheme per level
-        if level == 2:
-            payload = open(path, "rb").read()
-            replicate(self.comm, self.topo, ckpt_id, payload)
-            self.comm.barrier()
-            store_partner_copy(self.comm, self.topo, ckpt_id, d)
-        elif level == 3:
-            self._erasure_encode(ckpt_id, d, path)
-
-        # commit (rank0-equivalent; every rank writes the same manifest data
-        # in the single-process container, idempotent)
-        statuses = self.comm.allgather(
-            {"rank": self.comm.rank, "ok": True, "file": os.path.basename(path),
-             "nbytes": nbytes})
-        mf.write_manifest(root, ckpt_id, {
-            "kind": kind, "level": level, "world": self.comm.world,
-            "group_size": self.topo.group_size,
-            "erasure": self.cfg.erasure_scheme,
-            "block_bytes": self.cfg.block_bytes,
-            "ranks": statuses,
-            **(extra_meta or {}),
-        })
-        mf.commit(root, ckpt_id, keep_last=0)      # pruning handled below
-        self._prune_chains(root)
-        return StoreReport(ckpt_id, level, kind, nbytes, time.time() - t0,
-                           dirty_ratio, promoted)
+        """Coordinated store of this rank's protected data."""
+        return self.pipeline.store(StoreRequest(
+            named=named_host, ckpt_id=ckpt_id, level=level, kind=kind,
+            extra_meta=extra_meta, diff_supported=diff_supported))
 
     # ------------------------------------------------------------------ #
-
-    def _peer_ckpt_dir_for_write(self, rank: int, ckpt_id: int
-                                 ) -> Optional[str]:
-        """Resolve where a parity shard for ``rank`` should land (its tier
-        dir, committed or in-flight)."""
-        if rank == self.comm.rank:
-            base = self.local_root
-        else:
-            peer = self.comm.peer_local_dir(rank)
-            if peer is None:
-                return None
-            base = os.path.join(peer, "ckpts")
-        final = mf.ckpt_dir(base, ckpt_id)
-        tmp = mf.ckpt_dir(base, ckpt_id, tmp=True)
-        return final if os.path.isdir(final) else (
-            tmp if os.path.isdir(tmp) else None)
-
-    def _erasure_encode(self, ckpt_id: int, d: str, path: str) -> None:
-        """Erasure-encode across the node group.
-
-        Every member posts its payload to the whole group; whichever member
-        observes the complete set (in MPI: after the group barrier; in the
-        sequential test cluster: the last member to store) computes the
-        parity shards and places shard j on group[j % |group|]'s tier.
-        """
-        import json
-        group = self.topo.erasure_group(self.comm.rank)
-        g = self.topo.group_index(self.comm.rank)
-        payload = open(path, "rb").read()
-        for r in group:
-            if r != self.comm.rank:
-                self.comm.post(f"er:{ckpt_id}", r, payload)
-        self.comm.barrier()
-        blobs = [
-            payload if r == self.comm.rank
-            else self.comm.collect(f"er:{ckpt_id}", r)
-            for r in group
-        ]
-        if any(b is None for b in blobs):
-            return                  # not complete yet (an earlier member)
-        lengths = [len(b) for b in blobs]
-        if self.cfg.erasure_scheme == "xor":
-            parities = [erasure.encode_xor(blobs)]
-        else:
-            parities = erasure.encode_rs(
-                blobs, min(self.cfg.rs_parity, len(group)))
-        meta = json.dumps({"lengths": lengths, "group": group})
-        for j, par in enumerate(parities):
-            # parity placement: on the NEXT group's nodes (ring) so a single
-            # node loss never takes a payload and its covering parity
-            # together; single-group worlds fall back to in-group rotation
-            # (then XOR needs rs/m ≥ 2 to survive a parity-holder loss)
-            if self.comm.world > len(group):
-                holder = (group[-1] + 1 + j) % self.comm.world
-            else:
-                holder = group[(j + 1) % len(group)]
-            hd = d if holder == self.comm.rank else \
-                self._peer_ckpt_dir_for_write(holder, ckpt_id)
-            if hd is None:
-                hd = d              # fall back: keep shard locally
-            with open(os.path.join(hd, f"parity.g{g}.p{j}.bin"), "wb") as f:
-                f.write(par)
-            with open(os.path.join(hd, f"parity.g{g}.meta"), "w") as f:
-                f.write(meta)
-        with open(os.path.join(d, f"parity.g{g}.meta"), "w") as f:
-            f.write(meta)
-
-    # ------------------------------------------------------------------ #
-    # retention: keep the last N FULLs plus the diff chain above them
-    # ------------------------------------------------------------------ #
-
-    def _prune_chains(self, root: str) -> None:
-        ids = mf.list_committed(root)
-        fulls = [i for i in ids
-                 if mf.read_manifest(root, i).get("kind") == CHK_FULL]
-        keep_from = fulls[-self.cfg.keep_last_full] if len(
-            fulls) >= self.cfg.keep_last_full else (fulls[0] if fulls else None)
-        if keep_from is None:
-            return
-        for i in ids:
-            if i < keep_from:
-                import shutil
-                shutil.rmtree(mf.ckpt_dir(root, i), ignore_errors=True)
-
-    # ------------------------------------------------------------------ #
-    # read path
+    # read path — the tier recovery ladder
     # ------------------------------------------------------------------ #
 
     def available_ids(self) -> List[Tuple[int, str]]:
-        """All committed checkpoint ids across tiers → [(id, tier_root)].
-        Includes reachable peers' node-local tiers (a restarted rank on a
-        fresh node recovers from partner/parity held by survivors)."""
-        roots = [self.local_root, self.cfg.global_root]
-        for r in range(self.comm.world):
-            if r == self.comm.rank:
-                continue
-            peer = self.comm.peer_local_dir(r)
-            if peer is not None:
-                roots.append(os.path.join(peer, "ckpts"))
-        out = []
-        for root in roots:
-            for i in mf.list_committed(root):
-                out.append((i, root))
-        return sorted(out)
-
-    def _peer_ckpt_dirs(self, ckpt_id: int):
-        """This tier's checkpoint dir on every reachable node (recovery may
-        pull partner replicas / parity from surviving nodes' local storage)."""
-        dirs = []
-        for r in range(self.comm.world):
-            if r == self.comm.rank:
-                base = self.local_root
-            else:
-                peer = self.comm.peer_local_dir(r)
-                if peer is None:
-                    continue
-                base = os.path.join(peer, "ckpts")
-            d = mf.ckpt_dir(base, ckpt_id)
-            if os.path.isdir(d):
-                dirs.append(d)
-        return dirs
-
-    def _rank_payload(self, root: str, ckpt_id: int, rank: int
-                      ) -> Optional[bytes]:
-        """Fetch rank payload, falling back to partner / erasure recovery."""
-        p = os.path.join(mf.ckpt_dir(root, ckpt_id), f"rank{rank}.chk5")
-        if os.path.exists(p):
-            try:
-                CHK5Reader(p).close()
-                return open(p, "rb").read()
-            except CHK5CorruptionError:
-                pass
-        # search this node's dir plus reachable peers (L2 replicas / L3 parity
-        # live on *other* nodes' local storage)
-        search = [mf.ckpt_dir(root, ckpt_id)]
-        if root != self.cfg.global_root:
-            search += [d for d in self._peer_ckpt_dirs(ckpt_id)
-                       if d not in search]
-        for d in search:
-            p = os.path.join(d, f"rank{rank}.chk5")
-            if os.path.exists(p):
-                try:
-                    CHK5Reader(p).close()
-                    return open(p, "rb").read()
-                except CHK5CorruptionError:
-                    continue
-            pc = find_partner_copy(self.topo, d, rank)
-            if pc:
-                return open(pc, "rb").read()
-        # L3 erasure reconstruct across the surviving group files
-        try:
-            man = mf.read_manifest(root, ckpt_id)
-        except OSError:
-            man = {}
-        if man.get("level") == 3:
-            return self._erasure_reconstruct_multi(search, rank)
-        return None
-
-    def _erasure_reconstruct_multi(self, dirs, rank: int) -> Optional[bytes]:
-        """Reconstruct ``rank``'s payload from survivors + parity scattered
-        across the given checkpoint dirs (one per reachable node)."""
-        import json
-        group = self.topo.erasure_group(rank)
-        g = self.topo.group_index(rank)
-
-        def find(name: str) -> Optional[str]:
-            for d in dirs:
-                p = os.path.join(d, name)
-                if os.path.exists(p):
-                    return p
-            return None
-
-        meta_p = find(f"parity.g{g}.meta")
-        if meta_p is None:
-            return None
-        meta = json.loads(open(meta_p).read())
-        lengths = meta["lengths"]
-        survivors: Dict[int, bytes] = {}
-        for j, r in enumerate(group):
-            p = find(f"rank{r}.chk5")
-            if p:
-                survivors[j] = open(p, "rb").read()
-        parities: Dict[int, bytes] = {}
-        for j in range(len(group)):        # collect every surviving shard
-            p = find(f"parity.g{g}.p{j}.bin")
-            if p is not None:
-                parities[j] = open(p, "rb").read()
-        try:
-            if self.cfg.erasure_scheme == "xor":
-                blobs = erasure.decode_xor(survivors, parities[0], len(group),
-                                           lengths)
-            else:
-                blobs = erasure.decode_rs(survivors, parities, len(group),
-                                          lengths)
-        except Exception:
-            return None
-        return blobs[group.index(rank)]
+        return self.pipeline.available_ids()
 
     def load_latest(self, rank: Optional[int] = None
                     ) -> Optional[Tuple[Dict[str, np.ndarray], Dict[str, Any]]]:
-        """Restore newest restorable checkpoint: FULL base + diff replay."""
-        rank = self.comm.rank if rank is None else rank
-        cands = self.available_ids()
-        by_id: Dict[int, List[str]] = {}
-        for i, root in cands:
-            by_id.setdefault(i, []).append(root)
-        for ckpt_id in sorted(by_id, reverse=True):
-            got = self._try_restore(ckpt_id, by_id, rank)
-            if got is not None:
-                return got
-        return None
+        return self.pipeline.load_latest(rank)
 
-    def _read_payload_any_tier(self, ckpt_id: int, by_id, rank: int
-                               ) -> Optional[Tuple[bytes, Dict]]:
-        for root in by_id.get(ckpt_id, []):
-            blob = self._rank_payload(root, ckpt_id, rank)
-            if blob is not None:
-                return blob, mf.read_manifest(root, ckpt_id)
-        return None
-
-    def _try_restore(self, ckpt_id: int, by_id, rank: int):
-        # walk back to the base FULL
-        chain: List[Tuple[bytes, Dict]] = []
-        cur = ckpt_id
-        while True:
-            got = self._read_payload_any_tier(cur, by_id, rank)
-            if got is None:
-                return None
-            blob, man = got
-            chain.append((blob, man))
-            if man.get("kind") == CHK_FULL:
-                break
-            prev = [i for i in by_id if i < cur]
-            if not prev:
-                return None
-            cur = max(prev)
-        chain.reverse()                     # [full, diff, diff, ...]
-
-        named: Dict[str, np.ndarray] = {}
-        flat_u32: Dict[str, np.ndarray] = {}
-        meta_shape: Dict[str, Tuple[str, List[int]]] = {}
-        bb = None
-        for blob, man in chain:
-            bb = man.get("block_bytes", self.cfg.block_bytes)
-            rd = CHK5Reader(_BytesFile(blob))
-            if man.get("kind") == CHK_FULL:
-                for ds in rd.datasets():
-                    if ds.startswith("data/"):
-                        name = ds[len("data/"):]
-                        named[name] = rd.read_dataset(ds)
-                flat_u32.clear()
-            else:
-                for ds in rd.datasets():
-                    if not ds.endswith("/digest"):
-                        continue
-                    name = ds[len("delta/"): -len("/digest")]
-                    info = rd.info(ds)["attrs"]
-                    idx = rd.read_dataset(f"delta/{name}/idx")
-                    blocks = rd.read_dataset(f"delta/{name}/blocks")
-                    if name not in flat_u32:
-                        if name not in named:
-                            return None     # chain broken
-                        flat_u32[name] = leaf_to_u32_flat(named[name], bb)
-                        meta_shape[name] = (info["dtype"], info["shape"])
-                    flat_u32[name] = apply_delta(flat_u32[name], idx, blocks, bb)
-                    meta_shape[name] = (info["dtype"], info["shape"])
-            rd.close()
-        for name, buf in flat_u32.items():
-            dt, shp = meta_shape[name]
-            named[name] = u32_flat_to_leaf(buf, dt, shp)
-        final_meta = chain[-1][1]
-        return named, final_meta
-
-
-class _BytesFile(io.BytesIO):
-    """CHK5Reader takes a path; give it a seekable in-memory file instead."""
-
-    def __init__(self, data: bytes):
-        super().__init__(data)
+    def rank_payload(self, root: str, ckpt_id: int, rank: int
+                     ) -> Optional[bytes]:
+        """Fetch a rank payload via the recovery ladder (partner / erasure
+        fallback included)."""
+        got = self.pipeline.recover_payload(root, ckpt_id, rank)
+        return got[0] if got is not None else None

@@ -1,9 +1,15 @@
 """TCL — the Transparent Checkpoint Library layer (paper §5.3).
 
 TCL sits between the directives (context.py) and the backends: it owns
-serialization (pytree ⇄ named host arrays — the work Mercurium + TCL share
-in the paper), forwards requests to the selected backend in the backend's
+serialization (pytree ⇄ named arrays — the work Mercurium + TCL share in
+the paper), forwards requests to the selected backend in the backend's
 native call protocol, and performs transparent restart detection.
+
+TCL hands the backend the *device-side* protected leaves; the pipeline's
+Plan stage (core/pipeline.py) then runs the on-device hash/pack kernels and
+takes the device→host snapshot on this thread, in submission order — the
+synchronous cost the paper budgets for §4.2.2 — before the Pack → Place →
+Commit tail goes to a CP-dedicated thread when the backend has one.
 """
 from __future__ import annotations
 
@@ -15,7 +21,7 @@ import numpy as np
 from repro.backends.base import Backend
 from repro.backends.registry import make_backend
 from repro.core.comm import Communicator
-from repro.core.protect import flatten_named, select, to_host, unflatten_named
+from repro.core.protect import flatten_named, select, unflatten_named
 from repro.core.storage import CHK_FULL, StorageConfig, StoreReport
 
 
@@ -29,15 +35,18 @@ class TCL:
 
     def store(self, tree: Any, ckpt_id: int, level: int, kind: str = CHK_FULL,
               selectors: Optional[List[str]] = None) -> Optional[StoreReport]:
-        """Serialize the (selected) tree and forward to the backend.
+        """Select the protected leaves and forward to the backend.
 
-        The device→host snapshot happens here, synchronously — everything
-        after (hashing already done on device for DIFF, redundancy, I/O) is
-        the backend's business and may be asynchronous.
-        """
+        Leaves stay on device here: the pipeline's Plan stage performs the
+        snapshot (and, for CHK_DIFF, the on-device hash/pack) synchronously;
+        everything after may be asynchronous."""
         named_dev = select(flatten_named(tree)[0], selectors)
-        named_host = to_host(named_dev)
-        return self.backend.tcl_store(named_host, ckpt_id, level, kind)
+        return self.backend.tcl_store(named_dev, ckpt_id, level, kind)
+
+    def store_begin(self, ckpt_id: int, level: int):
+        """Open an incremental store (§8) on the backend's pipeline — parts
+        are added as they become ready; commit may be asynchronous."""
+        return self.backend.tcl_store_begin(ckpt_id, level)
 
     def load(self, template: Any,
              selectors: Optional[List[str]] = None) -> Optional[Any]:

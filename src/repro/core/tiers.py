@@ -1,0 +1,304 @@
+"""Storage tiers — the *Place* stage's pluggable backends (FTI's L1–L4
+ladder as first-class objects).
+
+A :class:`Tier` owns one rung of the checkpoint ladder, for **both**
+directions:
+
+    write side   ``place()``    — apply the tier's redundancy/copy scheme to
+                                  a packed payload sitting in a staging dir
+    read side    ``recover()``  — produce a rank's payload bytes from
+                                  whatever this tier persisted
+
+The four built-ins mirror the paper (§4.2.1) / FTI semantics:
+
+    ``LocalTier``     L1  node-local write (RAM-disk / NVMe analogue)
+    ``PartnerTier``   L2  partner copy on a different node
+    ``ErasureTier``   L3  Reed–Solomon (or XOR) parity across the node group
+    ``GlobalTier``    L4  parallel-file-system write (global directory)
+
+Write stacks compose tiers (L2 = local + partner, L3 = local + erasure);
+the recovery ladder tries every tier in level order L1 → L2 → L3 → L4.
+Backends select/compose stacks via ``Backend.compose_tiers`` — adding a new
+tier (compression, object store, multi-node batching) means subclassing
+``Tier`` and composing it into a stack; nothing in the pipeline changes.
+"""
+from __future__ import annotations
+
+import abc
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.core import manifest as mf
+from repro.core.comm import Communicator
+from repro.core.formats import CHK5CorruptionError, CHK5Reader
+from repro.redundancy import erasure
+from repro.redundancy.groups import Topology
+from repro.redundancy.partner import (
+    find_partner_copy,
+    replicate,
+    store_partner_copy,
+)
+
+
+class TierContext:
+    """Shared services a tier needs: config, communicator, topology, and
+    directory resolution across the local/global roots and reachable peers."""
+
+    def __init__(self, cfg, comm: Communicator, topo: Topology):
+        self.cfg = cfg
+        self.comm = comm
+        self.topo = topo
+
+    @property
+    def local_root(self) -> str:
+        return os.path.join(self.comm.node_local_dir, "ckpts")
+
+    @property
+    def global_root(self) -> str:
+        return self.cfg.global_root
+
+    def peer_ckpt_dirs(self, ckpt_id: int) -> List[str]:
+        """The local-tier checkpoint dir on every reachable node (recovery
+        pulls partner replicas / parity from surviving nodes' storage)."""
+        dirs = []
+        for r in range(self.comm.world):
+            if r == self.comm.rank:
+                base = self.local_root
+            else:
+                peer = self.comm.peer_local_dir(r)
+                if peer is None:
+                    continue
+                base = os.path.join(peer, "ckpts")
+            d = mf.ckpt_dir(base, ckpt_id)
+            if os.path.isdir(d):
+                dirs.append(d)
+        return dirs
+
+    def peer_ckpt_dir_for_write(self, rank: int, ckpt_id: int
+                                ) -> Optional[str]:
+        """Resolve where a shard for ``rank`` should land (its local tier
+        dir, committed or in-flight)."""
+        if rank == self.comm.rank:
+            base = self.local_root
+        else:
+            peer = self.comm.peer_local_dir(rank)
+            if peer is None:
+                return None
+            base = os.path.join(peer, "ckpts")
+        final = mf.ckpt_dir(base, ckpt_id)
+        tmp = mf.ckpt_dir(base, ckpt_id, tmp=True)
+        return final if os.path.isdir(final) else (
+            tmp if os.path.isdir(tmp) else None)
+
+    def recovery_dirs(self, root: str, ckpt_id: int) -> List[str]:
+        """Candidate dirs holding pieces of ``ckpt_id`` under ``root``:
+        the root's own dir, plus (for node-local roots) reachable peers'."""
+        search = [mf.ckpt_dir(root, ckpt_id)]
+        if root != self.global_root:
+            search += [d for d in self.peer_ckpt_dirs(ckpt_id)
+                       if d not in search]
+        return search
+
+
+def _valid_payload(path: str) -> Optional[bytes]:
+    """Read a CHK5 payload, rejecting corrupt containers."""
+    if not os.path.exists(path):
+        return None
+    try:
+        CHK5Reader(path).close()
+    except CHK5CorruptionError:
+        return None
+    return open(path, "rb").read()
+
+
+class Tier(abc.ABC):
+    """One rung of the checkpoint ladder (write + recovery)."""
+
+    name: str = "?"
+    level: int = 0                     # ladder rung this tier implements
+
+    def __init__(self, ctx: TierContext):
+        self.ctx = ctx
+
+    @property
+    def root(self) -> str:
+        """Where payloads (and the manifest) for this tier land."""
+        return self.ctx.local_root
+
+    def place(self, ckpt_id: int, stage_dir: str, payload_path: str) -> None:
+        """Write-side: apply this tier's scheme to the packed payload.
+        ``stage_dir`` is the uncommitted ``.tmp`` checkpoint dir."""
+
+    @abc.abstractmethod
+    def recover(self, ckpt_id: int, rank: int, root: str,
+                manifest: Dict, dirs: List[str]) -> Optional[bytes]:
+        """Read-side: return ``rank``'s payload bytes, or None if this tier
+        cannot produce it.  ``dirs`` is the candidate dir list for this
+        (root, ckpt_id) — computed once per ladder walk by the pipeline
+        (``TierContext.recovery_dirs``), not per tier."""
+
+
+class LocalTier(Tier):
+    """L1 — the payload itself on node-local storage (written by Pack;
+    place is a no-op)."""
+
+    name = "local"
+    level = 1
+
+    def recover(self, ckpt_id, rank, root, manifest, dirs):
+        for d in dirs:
+            if d.startswith(self.ctx.global_root):
+                continue               # global payloads are GlobalTier's rung
+            blob = _valid_payload(os.path.join(d, f"rank{rank}.chk5"))
+            if blob is not None:
+                return blob
+        return None
+
+
+class PartnerTier(Tier):
+    """L2 — replicate the payload to the ring partner on another node."""
+
+    name = "partner"
+    level = 2
+
+    def place(self, ckpt_id, stage_dir, payload_path):
+        payload = open(payload_path, "rb").read()
+        replicate(self.ctx.comm, self.ctx.topo, ckpt_id, payload)
+        self.ctx.comm.barrier()
+        store_partner_copy(self.ctx.comm, self.ctx.topo, ckpt_id, stage_dir)
+
+    def recover(self, ckpt_id, rank, root, manifest, dirs):
+        for d in dirs:
+            pc = find_partner_copy(self.ctx.topo, d, rank)
+            if pc:
+                return open(pc, "rb").read()
+        return None
+
+
+class ErasureTier(Tier):
+    """L3 — RS/XOR parity across the node group, shards scattered so one
+    node loss never takes a payload and its covering parity together."""
+
+    name = "erasure"
+    level = 3
+
+    def place(self, ckpt_id, stage_dir, payload_path):
+        ctx = self.ctx
+        group = ctx.topo.erasure_group(ctx.comm.rank)
+        g = ctx.topo.group_index(ctx.comm.rank)
+        payload = open(payload_path, "rb").read()
+        for r in group:
+            if r != ctx.comm.rank:
+                ctx.comm.post(f"er:{ckpt_id}", r, payload)
+        ctx.comm.barrier()
+        blobs = [
+            payload if r == ctx.comm.rank
+            else ctx.comm.collect(f"er:{ckpt_id}", r)
+            for r in group
+        ]
+        if any(b is None for b in blobs):
+            return                  # not complete yet (an earlier member)
+        lengths = [len(b) for b in blobs]
+        if ctx.cfg.erasure_scheme == "xor":
+            parities = [erasure.encode_xor(blobs)]
+        else:
+            parities = erasure.encode_rs(
+                blobs, min(ctx.cfg.rs_parity, len(group)))
+        meta = json.dumps({"lengths": lengths, "group": group})
+        for j, par in enumerate(parities):
+            # parity placement: on the NEXT group's nodes (ring) so a single
+            # node loss never takes a payload and its covering parity
+            # together; single-group worlds fall back to in-group rotation
+            # (then XOR needs rs/m ≥ 2 to survive a parity-holder loss)
+            if ctx.comm.world > len(group):
+                holder = (group[-1] + 1 + j) % ctx.comm.world
+            else:
+                holder = group[(j + 1) % len(group)]
+            hd = stage_dir if holder == ctx.comm.rank else \
+                ctx.peer_ckpt_dir_for_write(holder, ckpt_id)
+            if hd is None:
+                hd = stage_dir      # fall back: keep shard locally
+            with open(os.path.join(hd, f"parity.g{g}.p{j}.bin"), "wb") as f:
+                f.write(par)
+            with open(os.path.join(hd, f"parity.g{g}.meta"), "w") as f:
+                f.write(meta)
+        with open(os.path.join(stage_dir, f"parity.g{g}.meta"), "w") as f:
+            f.write(meta)
+
+    def recover(self, ckpt_id, rank, root, manifest, dirs):
+        if manifest.get("level") != 3:
+            return None
+        ctx = self.ctx
+        group = ctx.topo.erasure_group(rank)
+        g = ctx.topo.group_index(rank)
+
+        def find(name: str) -> Optional[str]:
+            for d in dirs:
+                p = os.path.join(d, name)
+                if os.path.exists(p):
+                    return p
+            return None
+
+        meta_p = find(f"parity.g{g}.meta")
+        if meta_p is None:
+            return None
+        meta = json.loads(open(meta_p).read())
+        lengths = meta["lengths"]
+        survivors: Dict[int, bytes] = {}
+        for j, r in enumerate(group):
+            p = find(f"rank{r}.chk5")
+            if p:
+                survivors[j] = open(p, "rb").read()
+        parities: Dict[int, bytes] = {}
+        for j in range(len(group)):        # collect every surviving shard
+            p = find(f"parity.g{g}.p{j}.bin")
+            if p is not None:
+                parities[j] = open(p, "rb").read()
+        try:
+            if ctx.cfg.erasure_scheme == "xor":
+                blobs = erasure.decode_xor(survivors, parities[0], len(group),
+                                           lengths)
+            else:
+                blobs = erasure.decode_rs(survivors, parities, len(group),
+                                          lengths)
+        except Exception:
+            return None
+        return blobs[group.index(rank)]
+
+
+class GlobalTier(Tier):
+    """L4 — the payload on the parallel file system (shared directory)."""
+
+    name = "global"
+    level = 4
+
+    @property
+    def root(self) -> str:
+        return self.ctx.global_root
+
+    def recover(self, ckpt_id, rank, root, manifest, dirs):
+        if root != self.ctx.global_root:
+            return None
+        p = os.path.join(mf.ckpt_dir(root, ckpt_id), f"rank{rank}.chk5")
+        return _valid_payload(p)
+
+
+def default_tier_stacks(ctx: TierContext) -> Dict[int, List[Tier]]:
+    """The FTI ladder: L2/L3 stack a redundancy tier on the local write."""
+    local = LocalTier(ctx)
+    return {
+        1: [local],
+        2: [local, PartnerTier(ctx)],
+        3: [local, ErasureTier(ctx)],
+        4: [GlobalTier(ctx)],
+    }
+
+
+def recovery_ladder(stacks: Dict[int, List[Tier]]) -> List[Tier]:
+    """Deduplicated tiers of every stack, in ladder order L1 → L4."""
+    seen: Dict[str, Tier] = {}
+    for lvl in sorted(stacks):
+        for t in stacks[lvl]:
+            seen.setdefault(t.name, t)
+    return sorted(seen.values(), key=lambda t: t.level)

@@ -21,6 +21,10 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 from repro.kernels.ref import HASH_SALT_A, HASH_SALT_B
 
 BR = 8          # block rows per tile
@@ -60,7 +64,7 @@ def blockhash_pallas(blocks_u32: jnp.ndarray, salt: np.uint32 = HASH_SALT_A,
         in_specs=[pl.BlockSpec((BR, BE), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((BR,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(blocks_u32)

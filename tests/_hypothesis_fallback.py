@@ -1,0 +1,147 @@
+"""Tiny stand-in for ``hypothesis`` so property tests still *run* when the
+package is absent (this container has no network access to install it).
+
+Implements just the surface these tests use — ``@given`` with keyword
+strategies, ``@settings(max_examples=, deadline=)``, and the ``integers /
+floats / sampled_from / lists / booleans`` strategies — drawing
+deterministic pseudo-random examples (seeded per test name, endpoints
+always included) instead of doing real shrinking/coverage search.  With
+``hypothesis`` installed (requirements-dev.txt) the real library is used
+and this module is never imported.
+"""
+from __future__ import annotations
+
+import inspect
+import zlib
+from typing import Any, Callable, List
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[np.random.Generator], Any],
+                 endpoints: List[Any] = ()):  # always-tried boundary cases
+        self._draw = draw
+        self.endpoints = list(endpoints)
+
+    def draw(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+
+class _St:
+    """The ``strategies`` namespace."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            endpoints=[min_value, max_value])
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        def draw(rng):
+            # log-uniform when the range spans decades (mirrors how
+            # hypothesis probes magnitudes), else uniform
+            if min_value > 0 and max_value / min_value > 1e3:
+                lo, hi = np.log(min_value), np.log(max_value)
+                return float(np.exp(rng.uniform(lo, hi)))
+            return float(rng.uniform(min_value, max_value))
+        return _Strategy(draw, endpoints=[min_value, max_value])
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))],
+                         endpoints=seq[:2])
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw, endpoints=[[]] if min_size == 0 else [])
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(2)),
+                         endpoints=[False, True])
+
+
+st = _St()
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def assume(condition: bool) -> None:
+    """Skip this example when its precondition doesn't hold."""
+    if not condition:
+        raise _Unsatisfied()
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Record max_examples on the (given-wrapped) test function."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    """Run the test over deterministic drawn examples.
+
+    Fixture parameters pass through untouched; strategy keywords are
+    filled per example.  The first examples exercise strategy endpoints
+    (min/max/empty), the rest are seeded draws."""
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        DEFAULT_MAX_EXAMPLES)
+            names = list(strategies)
+            # endpoint examples first: k-th example takes each strategy's
+            # k-th endpoint (when it has one), seeded draws fill the rest
+            n_end = max((len(s.endpoints) for s in strategies.values()),
+                        default=0)
+            base = zlib.crc32(fn.__qualname__.encode())
+            ran = 0
+            for i in range(max(1, n)):
+                rng = np.random.default_rng(base + 7919 * i)
+                drawn = {}
+                for name in names:
+                    s = strategies[name]
+                    if i < n_end and i < len(s.endpoints):
+                        drawn[name] = s.endpoints[i]
+                    else:
+                        drawn[name] = s.draw(rng)
+                try:
+                    fn(*args, **kwargs, **drawn)
+                    ran += 1
+                except _Unsatisfied:
+                    continue
+            if ran == 0:      # mirror hypothesis: unsatisfiable is an error
+                raise RuntimeError(
+                    f"{fn.__name__}: assume() rejected all {max(1, n)} "
+                    "examples — no assertion ever ran")
+        # hide strategy params from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = inspect.Signature(
+            [p for name, p in sig.parameters.items()
+             if name not in strategies])
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        if hasattr(fn, "_fallback_max_examples"):   # @settings below @given
+            wrapper._fallback_max_examples = fn._fallback_max_examples
+        return wrapper
+    return deco
+
+
+class HealthCheck:
+    """Placeholder so ``suppress_health_check=[...]`` settings parse."""
+    too_slow = data_too_large = filter_too_much = all = None

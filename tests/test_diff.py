@@ -2,7 +2,10 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # container without hypothesis: tiny shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.diff import (
     DiffEngine,

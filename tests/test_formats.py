@@ -4,7 +4,10 @@ import os
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # container without hypothesis: tiny shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.formats import (
     CHK5CorruptionError,

@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytest.importorskip("repro.dist",
+                    reason="repro.dist sharding subsystem not present")
 from repro.configs import get_arch
 from repro.core.context import (
     CHK_DIFF,

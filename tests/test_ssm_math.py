@@ -1,7 +1,10 @@
 """Chunked SSM algebra vs sequential recurrences (hypothesis sweeps)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # container without hypothesis: tiny shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.models.ssm import _ssd_chunked, _wkv6_chunked
 

@@ -22,6 +22,8 @@ def test_chkls_cli(tmp_path, capsys):
 
 def test_launch_train_worker_restart(tmp_path):
     """launch.train direct mode: fault → rerun → resume (subprocess)."""
+    pytest.importorskip("repro.dist",
+                        reason="launch.train needs repro.dist models")
     env = dict(os.environ, PYTHONPATH="src")
     d = str(tmp_path / "t")
     base = [sys.executable, "-m", "repro.launch.train", "--arch",
@@ -56,6 +58,11 @@ def test_heat2d_variants_restart_parity(tmp_path, variant):
     inj = FaultInjector(total_steps=40, at_progress=0.9)
     with pytest.raises(SimulatedFault):
         mod.run(n=32, steps=40, ckpt_every=10, ckpt_dir=d, injector=inj)
+    # a real abort kills the CP thread with the process; the in-process
+    # simulation must drain it so the restart doesn't race an orphan
+    # (same pattern as benchmarks/bench_overhead.py)
+    from repro.core.async_engine import drain_all
+    drain_all()
     out = mod.run(n=32, steps=40, ckpt_every=10, ckpt_dir=d)
     assert out["restarted"]
     assert abs(out["checksum"] - want) < 1e-3
