@@ -6,7 +6,6 @@ benchmark measures the synchronous portion of ``ctx.store`` both ways.
 """
 from __future__ import annotations
 
-import os
 import shutil
 import time
 from typing import Dict

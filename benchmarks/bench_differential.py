@@ -14,7 +14,6 @@ import shutil
 import time
 from typing import Dict, List
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

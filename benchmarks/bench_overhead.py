@@ -6,7 +6,6 @@ OpenCHK/native should be ≈1 (paper: within noise, <2 % worst case).
 """
 from __future__ import annotations
 
-import os
 import shutil
 import time
 from typing import Dict

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import glob
 import json
-import os
 from typing import Dict, List
 
 

@@ -1,0 +1,71 @@
+"""CI gate: store-path overhead must not regress vs BENCH_overhead.json.
+
+Runs benchmarks/bench_overhead.py (fault + restart, all three backends)
+and compares the measured ``overhead_ratio_*`` (OpenCHK / native wall
+time, same host, same run — the noise-robust store-path metric) against
+the committed baseline. Fails on a >25 % slowdown of any ratio; ratios at
+or under the absolute noise floor never fail. Writes the fresh numbers as
+a JSON artifact so CI uploads them per run.
+
+Update BENCH_overhead.json in the same PR when the pipeline legitimately
+changes.
+
+Usage:
+  PYTHONPATH=src:. python benchmarks/check_overhead_regression.py \
+      --baseline BENCH_overhead.json --out bench-overhead.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks import bench_overhead
+
+# ratios this close to native are within the paper's envelope regardless
+# of what the baseline measured — don't fail on noise around 1.0
+ABS_FLOOR = 1.15
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_overhead.json")
+    ap.add_argument("--out", default=None, help="write fresh results here")
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="max allowed ratio-vs-baseline slowdown factor")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)["results"]
+    res = bench_overhead.run(repeats=args.repeats)
+    print(json.dumps(res, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"benchmark": "bench_overhead (CI run)",
+                       "baseline": args.baseline, "results": res}, f, indent=1)
+
+    failures = []
+    for key, got in sorted(res.items()):
+        if not key.startswith("overhead_ratio_"):
+            continue
+        ref = base.get(key)
+        if ref is None:
+            continue
+        # a baseline that got a lucky fast run (ratio < 1) must not
+        # tighten the gate below "25% worse than parity": ±50% run-to-run
+        # noise on shared runners would then fail an unchanged store path
+        ref = max(ref, 1.0)
+        if got > ABS_FLOOR and got > ref * args.threshold:
+            failures.append(f"{key}: {got:.3f} vs baseline {ref:.3f} "
+                            f"(> {args.threshold:.2f}x)")
+    if failures:
+        print("store-path regression:\n" + "\n".join(failures),
+              file=sys.stderr)
+        return 1
+    print("store-path overhead within budget vs", args.baseline)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

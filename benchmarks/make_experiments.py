@@ -4,7 +4,6 @@ PYTHONPATH=src:. python benchmarks/make_experiments.py > EXPERIMENTS.md
 """
 from __future__ import annotations
 
-import csv
 import glob
 import io
 import json
@@ -132,7 +131,7 @@ def emit_perf(out):
 def emit_scaling(out):
     """Weak-scaling of the optimized jamba config to 1000+ nodes."""
     import dataclasses
-    from repro.configs import SHAPE_BY_NAME, get_arch
+    from repro.configs import get_arch
     from repro.configs.base import ShapeSpec
     from repro.roofline.analytic import analytic_report
 

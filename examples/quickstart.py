@@ -6,7 +6,6 @@ The paper's full CR surface is five lines (§6.3):
 Run:  PYTHONPATH=src python examples/quickstart.py
       (run it twice — the second run restarts from the checkpoint)
 """
-import jax
 import jax.numpy as jnp
 
 from repro.core.context import CheckpointConfig, CheckpointContext

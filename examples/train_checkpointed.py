@@ -10,7 +10,6 @@ Run:  PYTHONPATH=src python examples/train_checkpointed.py
 """
 import argparse
 import dataclasses
-import os
 import shutil
 
 import jax

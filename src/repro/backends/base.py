@@ -99,7 +99,13 @@ class Backend(abc.ABC):
             named=named, ckpt_id=ckpt_id, level=min(level, self.max_level),
             kind=kind, diff_supported=self.supports_diff))
         if self._cp is not None:
-            self._cp.submit(ckpt_id, lambda: self._finish(plan))
+            try:
+                self._cp.submit(ckpt_id, lambda: self._finish(plan))
+            except BaseException:
+                # the tail will never run — release the plan's digest
+                # fence or the next DIFF plan blocks forever
+                self.pipeline.abort_plan(plan)
+                raise
             return None
         return self._finish(plan)
 

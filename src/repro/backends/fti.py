@@ -10,7 +10,7 @@ this class only translates FTI's protect-registry call protocol onto it.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 

@@ -10,13 +10,13 @@ are the shared pipeline's tier stacks — VeloC adds no placement code.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 
 from repro.backends.base import Backend
 from repro.core.comm import Communicator
-from repro.core.storage import CHK_FULL, StorageConfig, StoreReport
+from repro.core.storage import CHK_FULL, StorageConfig
 
 VELOC_SUCCESS = 0
 VELOC_FAILURE = -1

@@ -8,7 +8,7 @@ minus ``long_500k`` for pure full-attention archs — see DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # --------------------------------------------------------------------------- #

@@ -4,10 +4,11 @@ One thread per host runs the checkpoint pipeline's Pack → Place → Commit
 tail — serialization, redundancy, I/O — while the accelerator keeps
 computing.  The Plan stage always stays on the training thread, in
 submission order; that is the only synchronous cost: the device→host
-snapshot, plus — on diff-capable backends — the on-device blockhash/pack
-at HBM bandwidth that keeps the digest chain current (clean leaves are
-skipped via the identity cache; backends without checkpoint kinds skip
-digest bookkeeping entirely).  FULL, DIFF and incremental stores all go
+snapshot, plus — for CHK_DIFF — the on-device blockhash/pack at HBM
+bandwidth (clean leaves are skipped via the identity cache).  FULL stores
+defer their digest bookkeeping to this thread behind a fence (a later
+DIFF plan waits for it; backends without checkpoint kinds skip digest
+bookkeeping entirely).  FULL, DIFF and incremental stores all go
 through the same queue, so they compose and serialize correctly against
 each other.
 

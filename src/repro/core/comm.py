@@ -13,7 +13,6 @@ import os
 import threading
 from typing import Any, Callable, Dict, List, Optional
 
-import jax
 
 
 class Communicator:

@@ -27,7 +27,7 @@ Self-iterative data expressions (§5.2) appear as ``protect`` selectors:
 from __future__ import annotations
 
 import os
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, List, Optional
 
 from repro.core.comm import Communicator, LocalComm

@@ -26,7 +26,7 @@ from __future__ import annotations
 import os
 import struct
 import zlib
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional
 
 import msgpack
 import numpy as np

@@ -23,7 +23,6 @@ import json
 import os
 import shutil
 import time
-from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
 MANIFEST = "manifest.json"

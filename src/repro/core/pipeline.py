@@ -7,7 +7,12 @@ incremental, any backend — flows through the same four stages:
             only work that must stay on the calling thread: the device→host
             snapshot and (for CHK_DIFF) the on-device blockhash/diffpack
             kernels.  Runs in submission order, so back-to-back asynchronous
-            DIFF stores see a consistent digest chain.
+            DIFF stores see a consistent digest chain.  FULL stores on
+            diff-capable backends owe digest bookkeeping too, but it is
+            *deferred* to the tail behind a fence (``_wait_digest_fence``)
+            — a DIFF planned after an in-flight FULL waits for that FULL's
+            digests instead of the training thread paying a synchronous
+            full-tree blockhash it may never need.
     Pack    serialization of the planned payload into the staging dir
             (``ckpt-<id>.tmp``) as a CHK5 container.
     Place   the tier stack for the level applies redundancy
@@ -30,6 +35,7 @@ from __future__ import annotations
 
 import io
 import os
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
@@ -120,6 +126,18 @@ class Plan:
     t0: float = field(default_factory=time.time)
     plan_seconds: float = 0.0          # time spent in plan() itself
     digest_epoch: int = -1             # DIFF only: chain epoch at plan time
+    pending_digests: Optional["_PendingDigests"] = None   # FULL: deferred
+
+
+@dataclass
+class _PendingDigests:
+    """FULL-store digest bookkeeping deferred to the async tail.
+
+    Holds the *device* leaves until the CP thread hashes them; ``done`` is
+    the fence a later DIFF plan waits on so it never reads digests that
+    describe the state before an in-flight FULL."""
+    named: Optional[Dict[str, Any]]
+    done: threading.Event = field(default_factory=threading.Event)
 
 
 @dataclass
@@ -146,6 +164,10 @@ class CheckpointPipeline:
         self.stacks: Dict[int, List[Tier]] = (
             compose or default_tier_stacks)(self.ctx)
         self.ladder: List[Tier] = recovery_ladder(self.stacks)
+        # newest FULL store whose digest update is still pending on the CP
+        # thread; the CP queue is FIFO, so fencing on the newest fences all
+        self._digest_fence: Optional[_PendingDigests] = None
+        self._fence_lock = threading.Lock()
         os.makedirs(self.ctx.local_root, exist_ok=True)
         os.makedirs(cfg.global_root, exist_ok=True)
 
@@ -191,6 +213,11 @@ class CheckpointPipeline:
         if kind == CHK_DIFF and not req.diff_supported:
             kind = CHK_FULL                 # VeloC/SCR: no checkpoint kinds
             attrs["diff_fallback"] = True
+        if kind == CHK_DIFF:
+            # fence: an in-flight FULL may still owe its digest update to
+            # the CP thread — wait for it so this delta diffs against the
+            # post-FULL digests, never stale ones
+            self._wait_digest_fence()
         # epoch read BEFORE delta computation: an invalidate() racing in
         # from a CP-thread failure mid-plan must make finish() refuse this
         # delta, not slip past the guard
@@ -203,21 +230,58 @@ class CheckpointPipeline:
                 promoted = True
             else:
                 attrs["base_required"] = True
+        pending = None
         if kind == CHK_FULL:
-            # skip digest bookkeeping when the backend can never consume it
-            # (no checkpoint kinds) and when the promote path just computed
-            # exactly these digests — both would be wasted synchronous
-            # full-tree hashing on the training thread
-            if req.diff_supported and not promoted:
-                self.diff.update_digests_full(req.named)
             named_host = to_host(req.named)
+            # digest bookkeeping is skipped when the backend can never
+            # consume it (no checkpoint kinds) and when the promote path
+            # just computed exactly these digests; otherwise it is owed —
+            # but *deferred* to the async tail (finish), so a FULL store
+            # never pays a synchronous full-tree blockhash on the training
+            # thread just to keep a digest chain current that a later DIFF
+            # may never read.  DIFF plans fence on it (_wait_digest_fence).
+            # Registered only after to_host succeeded — nothing between
+            # here and finish()/abort_plan() can fail and leak the fence
+            if req.diff_supported and not promoted:
+                pending = _PendingDigests(named=dict(req.named))
+                with self._fence_lock:
+                    self._digest_fence = pending
 
         return Plan(ckpt_id=req.ckpt_id, level=level, kind=kind, tiers=tiers,
                     root=tiers[0].root, attrs=attrs, extra=extra,
                     named_host=named_host, deltas=deltas,
                     dirty_ratio=dirty_ratio, promoted_full=promoted,
                     plan_seconds=time.time() - t_plan,
-                    digest_epoch=epoch if kind == CHK_DIFF else -1)
+                    digest_epoch=epoch if kind == CHK_DIFF else -1,
+                    pending_digests=pending)
+
+    def _wait_digest_fence(self) -> None:
+        """Block until every deferred FULL digest update has run (the CP
+        queue is FIFO: the newest pending fence dominates older ones).
+        Released even when the FULL's tail fails — failure invalidates the
+        touched leaves, which the next DIFF turns into a promote."""
+        with self._fence_lock:
+            pending = self._digest_fence
+        if pending is not None:
+            pending.done.wait()
+
+    def _release_digest_fence(self, plan: Plan) -> None:
+        pending = plan.pending_digests
+        if pending is None:
+            return
+        pending.named = None            # drop device references
+        pending.done.set()
+        with self._fence_lock:
+            if self._digest_fence is pending:
+                self._digest_fence = None
+
+    def abort_plan(self, plan: Plan) -> None:
+        """A planned store will never reach finish() (e.g. the CP submit
+        itself raised): release its fence so later DIFF plans don't block
+        forever. No invalidate needed — the digests still describe the
+        last *committed* checkpoint, which is the correct DIFF base when
+        this store never happened."""
+        self._release_digest_fence(plan)
 
     def plan_external(self, ckpt_id: int, level: int,
                       extra_meta: Optional[Dict[str, Any]] = None) -> Plan:
@@ -325,6 +389,15 @@ class CheckpointPipeline:
         leaves so a later DIFF can't delta against phantom data."""
         plan.t0 = time.time()       # exclude any CP-queue wait from seconds
         try:
+            if plan.pending_digests is not None:
+                # the deferred FULL digest bookkeeping (blockhash at HBM
+                # bandwidth) — off the training thread, behind the fence.
+                # Released as soon as the digests are current: a fenced
+                # DIFF plan need not wait for this store's I/O, and the
+                # epoch guard below refuses its delta if this tail fails
+                # after the release (invalidate bumps the epoch)
+                self.diff.update_digests_full(plan.pending_digests.named)
+                self._release_digest_fence(plan)
             if plan.kind == CHK_DIFF and plan.digest_epoch != self.diff.epoch:
                 # a store that failed AFTER this one was planned invalidated
                 # part of the chain — this delta may reference base content
@@ -339,6 +412,8 @@ class CheckpointPipeline:
         except BaseException:
             self.diff.invalidate(self._plan_leaf_paths(plan))
             raise
+        finally:
+            self._release_digest_fence(plan)
 
     def finish_external(self, plan: Plan, payload_path: str,
                         nbytes: int) -> StoreReport:

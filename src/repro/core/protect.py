@@ -12,7 +12,6 @@ Selectors are the analogue of *self-iterative data expressions* (§5.2):
 """
 from __future__ import annotations
 
-import fnmatch
 import re
 from typing import Any, Dict, List, Optional, Tuple
 

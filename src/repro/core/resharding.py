@@ -1,6 +1,15 @@
 """Elastic restore: rebuild state saved under one world/mesh layout onto
 another (node-count changes after failures, pod rescale, DP-width change).
 
+Two restore paths live here:
+
+- **mesh-level** (``reshard_tree`` / ``gather_tree``): single-process
+  multi-device. Checkpoints gather sharded leaves to host at Plan; restore
+  places them onto the restart template's shardings (``tcl.load`` honors
+  the template leaf's ``.sharding``) — store on a 4×4 mesh, restart on
+  2×8 or 16×1, bit-exact (tests/test_mesh_restart.py).
+- **rank-file-level** (``ElasticLoader`` et al., below): multi-process.
+
 Shards are recorded per rank with explicit index metadata (axis-0 chunking —
 the DP/ZeRO layout), so a loader for world W2 assembles its slice from any
 number of W1 chunk files, reading only overlapping byte ranges via CHK5
@@ -13,8 +22,23 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import manifest as mf
-from repro.core.formats import CHK5Reader, CHK5Writer, dtype_to_str, str_to_dtype
+from repro.core.formats import CHK5Reader, CHK5Writer, str_to_dtype
+
+
+def reshard_tree(tree: Any, shardings: Any) -> Any:
+    """Place every leaf of ``tree`` per ``shardings`` (a matching pytree of
+    jax ``Sharding``s — e.g. ``repro.dist.sharding.param_shardings`` under
+    a target mesh). Works host→mesh and mesh→mesh; this is how a restart
+    template declares the layout a checkpoint should restore onto."""
+    import jax
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+
+
+def gather_tree(tree: Any) -> Any:
+    """Gather every (possibly sharded) leaf to a host ``np.ndarray`` —
+    the bit-exact global view, independent of the mesh it lived on."""
+    import jax
+    return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
 
 def shard_bounds(n_rows: int, world: int, rank: int) -> Tuple[int, int]:

@@ -38,8 +38,8 @@ from repro.core.pipeline import (           # re-exported for compatibility
     StoreRequest,
 )
 
-__all__ = ["CHK_FULL", "CHK_DIFF", "StorageConfig", "StoreReport",
-           "StoreRequest", "StorageEngine"]
+__all__ = ["CHK_FULL", "CHK_DIFF", "CheckpointPipeline", "Packed", "Plan",
+           "StorageConfig", "StoreReport", "StoreRequest", "StorageEngine"]
 
 
 class StorageEngine:

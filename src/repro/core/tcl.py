@@ -71,7 +71,13 @@ class TCL:
                     raise TypeError(
                         f"{path}: checkpoint dtype {arr.dtype} != "
                         f"template {leaf.dtype}")
-                merged[path] = jax.device_put(arr)
+                # mesh-change restart: the template leaf's sharding is the
+                # *target* layout — a checkpoint gathered to host under one
+                # mesh lands sharded onto whatever mesh the restart
+                # template carries (core/resharding.reshard_tree builds
+                # such templates); plain arrays restore as before
+                merged[path] = jax.device_put(
+                    arr, getattr(leaf, "sharding", None))
             else:
                 merged[path] = leaf
         return unflatten_named(treedef, merged, template)

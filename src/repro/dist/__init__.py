@@ -1,0 +1,38 @@
+"""repro.dist — the distributed execution layer.
+
+Three concerns, three modules:
+
+- :mod:`repro.dist.context` — mesh axis conventions (``DATA``/``MODEL``),
+  the ``use_mesh`` ambient-mesh context, and the divisibility-aware
+  sharding-hint layer (``shard_hint`` / ``shard_decode_kv``) that model
+  code calls unconditionally: every hint is a no-op without an active
+  mesh, so the same model runs on a laptop CPU and a multi-pod mesh.
+- :mod:`repro.dist.sharding` — path-based parameter sharding rules over
+  ``param_struct()`` pytrees, batch sharding with pod→data folding, and
+  decode-cache shardings.
+- :mod:`repro.dist.compression` — int8 gradient compression (per-block
+  max-abs scaling) for bandwidth-bound gradient exchange and compressed
+  checkpoint payloads.
+
+Checkpointing interaction: shardings live *outside* the checkpoint. The
+pipeline's Plan stage gathers sharded leaves to host (``to_host`` works on
+any fully-addressable jax array), and restore places leaves onto whatever
+mesh the restart template carries (``core/resharding.reshard_tree``) — so
+a checkpoint written under one mesh restores under another unchanged.
+"""
+from repro.dist.context import (  # noqa: F401
+    DATA,
+    MODEL,
+    POD,
+    constraint_hints,
+    data_axes,
+    resolve_spec,
+    shard_decode_kv,
+    shard_hint,
+    use_mesh,
+)
+from repro.dist.sharding import (  # noqa: F401
+    batch_sharding,
+    cache_shardings,
+    param_shardings,
+)

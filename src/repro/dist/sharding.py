@@ -1,0 +1,144 @@
+"""Path-based parameter sharding rules over ``param_struct()`` pytrees.
+
+Rule resolution order (per leaf):
+
+1. The leaf's *name* (last path component) selects an ordered list of
+   candidate axis templates. Templates describe the **trailing** dims of
+   the leaf; any extra leading dims (the stacked-layer ``(n_groups, ...)``
+   dim from ``lax.scan`` stacking, encdec's ``(L, ...)``) are replicated —
+   so one rule covers a layer whether it is stacked or not.
+2. Candidates are tried in order through the divisibility-aware
+   ``resolve_spec``; the first template that keeps at least one axis wins.
+   This is how the vocab-parallel embedding falls back to hidden-dim
+   sharding when the vocabulary does not divide the model axis (granite's
+   49155), and how expert-parallel MoE weights fall back to feature-dim
+   sharding when the expert count does not.
+3. No rule, or every candidate dissolved → fully replicated.
+
+Conventions follow Megatron/MaxText tensor parallelism: projections *into*
+the sharded dimension are column-parallel (output features on MODEL),
+projections back to the residual stream are row-parallel (input features
+on MODEL), embeddings are vocab-parallel when divisible.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import keystr, tree_map_with_path
+
+from repro.dist.context import MODEL, data_axes, resolve_spec
+
+
+def _path_str(path) -> str:
+    """KeyPath → canonical slash path (same form as core/protect.py):
+    ``('groups', 0, 'attn', 'wq')`` → ``"groups/0/attn/wq"``."""
+    return "/".join(keystr((k,)).strip("[]'\".") for k in path)
+
+
+# column-parallel (output features on MODEL) / row-parallel (input features)
+_COL: List[Tuple] = [(None, MODEL)]
+_ROW: List[Tuple] = [(MODEL, None)]
+# expert-parallel over E first, feature-parallel fallback
+_MOE_IN = [(MODEL, None, None), (None, None, MODEL)]
+_MOE_OUT = [(MODEL, None, None), (None, MODEL, None)]
+
+_RULES = {
+    # embeddings: vocab-parallel, hidden-dim fallback
+    "embed": [(MODEL, None), (None, MODEL)],
+    "lm_head": [(None, MODEL), (MODEL, None)],
+    # attention (GQA + rwkv share wk/wv/wo names; shapes differ, rules don't)
+    "wq": _COL, "wk": _COL, "wv": _COL, "wo": _ROW,
+    "bq": [(MODEL,)], "bk": [(MODEL,)], "bv": [(MODEL,)],
+    # MLA projections
+    "w_dq": _COL, "w_uq": _COL, "w_dkv": _COL, "w_uk": _COL, "w_uv": _COL,
+    # dense MLP
+    "w_gate": _COL, "w_up": _COL, "w_down": _ROW,
+    # MoE experts (leading E dim)
+    "moe_w_gate": _MOE_IN, "moe_w_up": _MOE_IN, "moe_w_down": _MOE_OUT,
+    # rwkv time-mix / mamba in-projections
+    "wr": _COL, "wg": _COL, "w_z": _COL, "w_x": _COL,
+}
+
+
+def _resolve_rules(mesh: Mesh, name: str, shape: Sequence[int]) -> Optional[P]:
+    for template in _RULES.get(name, ()):
+        if len(template) > len(shape):
+            continue
+        full = (None,) * (len(shape) - len(template)) + tuple(template)
+        spec = resolve_spec(mesh, full, shape)
+        if spec is not None:
+            return spec
+    return None
+
+
+def param_shardings(mesh: Mesh, params: Any) -> Any:
+    """Pytree of ``NamedSharding`` matching ``params`` (arrays or
+    ShapeDtypeStructs), resolved through the rule table; unmatched leaves
+    (norm scales, routers, decay params, scalars) are replicated."""
+
+    def one(path, leaf):
+        name = _path_str(path).rsplit("/", 1)[-1]
+        spec = _resolve_rules(mesh, name, leaf.shape)
+        return NamedSharding(mesh, spec if spec is not None else P())
+
+    return tree_map_with_path(one, params)
+
+
+def _folded_data(mesh: Mesh):
+    dax = data_axes(mesh)
+    if not dax:
+        return None
+    return dax[0] if len(dax) == 1 else dax
+
+
+def batch_sharding(mesh: Mesh, ndim: int, *,
+                   batch_divisible: bool = True) -> NamedSharding:
+    """Batch-dim sharding over the folded data axes (``pod`` folds into
+    ``data`` on multi-pod meshes). ``batch_divisible=False`` (e.g. a
+    global batch of 1) replicates."""
+    daxis = _folded_data(mesh)
+    if daxis is None or not batch_divisible:
+        return NamedSharding(mesh, P())
+    return NamedSharding(mesh, P(daxis, *([None] * (ndim - 1))))
+
+
+def cache_shardings(mesh: Mesh, caches: Any, global_batch: int, *,
+                    seq_axis_sharded: bool = False) -> Any:
+    """Decode-cache shardings (stacked ``(L, B, C, ...)`` leaves).
+
+    Default: shard the batch dim over the folded data axes. With
+    ``seq_axis_sharded`` (long-context, batch too small to split) the
+    cache-sequence dim — the dim after batch — is sharded instead, which
+    is what makes ``shard_decode_kv``'s partial-softmax decode line up
+    with the cache layout. A head dim two past batch shards on MODEL when
+    divisible; everything that does not divide stays replicated.
+    """
+    daxis = _folded_data(mesh)
+    dsize = 1
+    if daxis is not None:
+        for a in (daxis if isinstance(daxis, tuple) else (daxis,)):
+            dsize *= mesh.shape[a]
+    tp = mesh.shape.get(MODEL, 1)
+
+    def one(leaf):
+        shape = leaf.shape
+        dims: list = [None] * len(shape)
+        bdim = next((i for i, d in enumerate(shape) if d == global_batch),
+                    None)
+        if bdim is not None and daxis is not None:
+            if seq_axis_sharded:
+                sdim = bdim + 1
+                if sdim < len(shape) and shape[sdim] % dsize == 0:
+                    dims[sdim] = daxis
+            elif global_batch % dsize == 0:
+                dims[bdim] = daxis
+        if bdim is not None and MODEL in mesh.axis_names:
+            hdim = bdim + 2
+            if (hdim < len(shape) and dims[hdim] is None
+                    and shape[hdim] % tp == 0):
+                dims[hdim] = MODEL
+        return NamedSharding(mesh, P(*dims))
+
+    import jax
+    return jax.tree.map(one, caches)

@@ -8,13 +8,12 @@ changing topology (future-work direction made concrete).
 """
 from __future__ import annotations
 
-import os
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.core import manifest as mf
-from repro.core.resharding import ElasticLoader, elastic_restore, shard_bounds
+from repro.core.resharding import elastic_restore
 
 
 def find_latest_sharded(roots) -> Optional[Tuple[str, int]]:

@@ -3,7 +3,6 @@ of application progress, then restart until successful completion)."""
 from __future__ import annotations
 
 import os
-import signal
 from dataclasses import dataclass
 from typing import Optional
 

@@ -7,7 +7,6 @@ oracle bit-exactly.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -211,6 +211,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     mem = compiled.memory_analysis()
     print(mem)                                  # proves it fits
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):         # older jax: dict per device
+        cost = cost[0] if cost else {}
     print({k: cost.get(k) for k in ("flops", "bytes accessed")})
     hlo = compiled.as_text()
 

@@ -7,7 +7,6 @@ resumes generation without re-running prefill.
 from __future__ import annotations
 
 import argparse
-import os
 import sys
 import time
 
@@ -31,7 +30,7 @@ def main() -> int:
     from repro.configs import get_arch
     from repro.core.context import CheckpointConfig, CheckpointContext
     from repro.models.zoo import build_model
-    from repro.serve.engine import ServeState, ServingEngine
+    from repro.serve.engine import ServingEngine
 
     cfg = get_arch(args.arch)
     if not args.full:

@@ -13,7 +13,7 @@ numpy table-driven GF math: fast enough for checkpoint-sized payloads.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Sequence
 
 import numpy as np
 

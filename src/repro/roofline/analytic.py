@@ -21,7 +21,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Dict, Optional
 

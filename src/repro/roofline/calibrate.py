@@ -10,7 +10,6 @@ Run:  PYTHONPATH=src python -m repro.roofline.calibrate
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 
 import jax

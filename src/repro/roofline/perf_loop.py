@@ -18,7 +18,7 @@ import argparse
 import dataclasses
 import json
 import os
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 from repro.configs import SHAPE_BY_NAME, get_arch
 from repro.roofline.analytic import analytic_report

@@ -8,13 +8,11 @@ without re-running prefill (examples/serve_resilient.py).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig
 from repro.models.zoo import Model
 
 

@@ -19,13 +19,11 @@ from typing import Any, Callable, Dict, Optional
 
 import jax
 
-from repro.configs.base import ArchConfig
-from repro.core.context import CHK_DIFF, CHK_FULL, CheckpointConfig, CheckpointContext
+from repro.core.context import CHK_FULL, CheckpointContext
 from repro.data.synthetic import next_batch
 from repro.ft.detector import Heartbeat
 from repro.ft.failures import FaultInjector
 from repro.models.zoo import Model
-from repro.train.optimizer import AdamWConfig
 from repro.train.state import TrainState
 
 

@@ -1,7 +1,7 @@
 """Pure-JAX AdamW + learning-rate schedules (no optax in this container)."""
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,13 +8,11 @@ lives in ``repro/dist/compression.py``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig
 from repro.models.zoo import Model
 from repro.models.layers import softmax_cross_entropy
 from repro.train.optimizer import AdamWConfig, adamw_update

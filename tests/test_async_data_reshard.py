@@ -1,9 +1,7 @@
 """CP-dedicated thread semantics, data-cursor determinism, elastic restore."""
-import os
 import threading
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,5 +1,4 @@
 """Backends: TCL surface parity, native APIs, diff support matrix."""
-import os
 
 import jax.numpy as jnp
 import numpy as np

@@ -2,10 +2,9 @@
 import os
 
 import numpy as np
-import pytest
 
 from repro.core.comm import SimulatedCluster
-from repro.core.storage import CHK_FULL, StorageConfig, StorageEngine
+from repro.core.storage import StorageConfig, StorageEngine
 from repro.ft.straggler import commit_if_quorum, validate_quorum
 from repro.redundancy.groups import Topology
 

@@ -1,7 +1,6 @@
 """Differential checkpointing: dirty detection, replay, break-even promote."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:          # container without hypothesis: tiny shim

@@ -5,11 +5,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
-
-pytest.importorskip("repro.dist",
-                    reason="repro.dist sharding subsystem not present")
-
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

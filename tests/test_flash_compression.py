@@ -1,5 +1,4 @@
 """Flash-attention Pallas kernel vs oracle; int8 gradient compression."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -8,8 +7,6 @@ try:
 except ImportError:          # container without hypothesis: tiny shim
     from _hypothesis_fallback import given, settings, st
 
-pytest.importorskip("repro.dist",
-                    reason="repro.dist sharding subsystem not present")
 from repro.dist.compression import (
     compress_roundtrip_error,
     dequantize_int8,
@@ -73,6 +70,14 @@ def test_int8_zero_grad_exact():
     g = jnp.zeros(100)
     q, s = quantize_int8(g)
     assert np.all(np.asarray(dequantize_int8(q, s, g.shape)) == 0)
+
+
+def test_roundtrip_error_metric_small():
+    rng = np.random.RandomState(3)
+    g = jnp.asarray(rng.randn(4, 1000).astype(np.float32))
+    rel = float(compress_roundtrip_error(g))
+    assert 0.0 < rel < 0.01          # int8 ≈ 1/127 per-block relative error
+    assert float(compress_roundtrip_error(jnp.zeros(64))) == 0.0
 
 
 def test_error_feedback_reduces_bias():

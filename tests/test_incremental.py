@@ -1,6 +1,5 @@
 """Incremental checkpointing (§8 Future Work): parts stream in, commit is
 atomic, restore is indistinguishable from a monolithic store."""
-import os
 
 import jax.numpy as jnp
 import numpy as np

@@ -1,5 +1,4 @@
 """Pallas kernels vs jnp oracles — shape/dtype sweeps in interpret mode."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

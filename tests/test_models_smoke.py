@@ -6,8 +6,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("repro.dist",
-                    reason="repro.dist sharding subsystem not present")
 from repro.configs import ALL_ARCHS, get_arch
 from repro.data.synthetic import init_data_state, next_batch
 from repro.models.zoo import build_model, make_dummy_batch

@@ -193,6 +193,52 @@ def test_digest_cache_skips_clean_jax_leaves(monkeypatch):
     assert any(d.path == "a" and d.dirty_idx.shape[0] for d in deltas)
 
 
+def test_full_digest_bookkeeping_moves_to_cp_thread(tmp_path, monkeypatch):
+    """FULL stores on diff-capable backends must not pay a synchronous
+    full-tree blockhash in Plan: the digest update runs on the CP thread,
+    and an interleaved DIFF fences on it (fresh base, no stale digests)."""
+    import threading
+    import repro.core.diff as diff_mod
+    main = threading.get_ident()
+    hash_threads = []
+    real = diff_mod.ops.blockhash
+    monkeypatch.setattr(
+        diff_mod.ops, "blockhash",
+        lambda leaf, bb: hash_threads.append(threading.get_ident())
+        or real(leaf, bb))
+
+    cfg = CheckpointConfig(dir=str(tmp_path / "h"), backend="fti",
+                           dedicated_thread=True, block_bytes=256)
+    ctx = CheckpointContext(cfg)
+    x1 = jnp.arange(4096, dtype=jnp.float32)
+    ctx.store({"x": x1}, id=1, level=1)                     # FULL, async
+    x2 = x1.at[7].set(-1.0)
+    ctx.store({"x": x2}, id=2, level=1, kind=CHK_DIFF)      # interleaved DIFF
+    x3 = x2.at[2048].set(-2.0)
+    ctx.store({"x": x3}, id=3, level=1)                     # FULL again
+    x4 = x3.at[9].set(-3.0)
+    ctx.store({"x": x4}, id=4, level=1, kind=CHK_DIFF)
+    ctx.wait()
+    ctx.shutdown()
+
+    # FULL digests hashed off-thread; DIFF plans hash on the caller (by
+    # design) AFTER the fence, so the order is [cp, main, cp, main]
+    assert len(hash_threads) == 4
+    assert hash_threads[0] != main and hash_threads[2] != main
+    assert hash_threads[1] == main and hash_threads[3] == main
+
+    ctx2 = CheckpointContext(CheckpointConfig(dir=str(tmp_path / "h"),
+                                              backend="fti"))
+    named, meta = ctx2.tcl.backend.engine.load_latest()
+    # id=4 committed as a real DIFF link (a stale/missing base would have
+    # promoted it to FULL) and the replayed chain carries every mutation
+    assert meta["kind"] == CHK_DIFF and meta["id"] == 4
+    assert named["x"][7] == -1.0
+    assert named["x"][2048] == -2.0
+    assert named["x"][9] == -3.0
+    ctx2.shutdown()
+
+
 def test_deferred_error_surfaces_before_digest_mutation(tmp_path):
     """A failed async store must raise at the next directive BEFORE that
     directive's Plan advances the digest chain (and before an incremental

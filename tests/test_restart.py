@@ -1,21 +1,13 @@
 """End-to-end restart semantics: exactly-once data, bitwise resume parity,
 directive clauses, fault-injection loop."""
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("repro.dist",
-                    reason="repro.dist sharding subsystem not present")
 from repro.configs import get_arch
-from repro.core.context import (
-    CHK_DIFF,
-    CHK_FULL,
-    CheckpointConfig,
-    CheckpointContext,
-)
+from repro.core.context import CHK_DIFF, CheckpointConfig, CheckpointContext
 from repro.data.synthetic import init_data_state
 from repro.ft.failures import FaultInjector, SimulatedFault
 from repro.models.zoo import build_model

@@ -4,10 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-try:
-    from hypothesis import given, settings, strategies as st
-except ImportError:          # container without hypothesis: tiny shim
-    from _hypothesis_fallback import given, settings, st
 
 from repro.configs import SHAPE_BY_NAME, get_arch
 from repro.configs.base import ShapeSpec

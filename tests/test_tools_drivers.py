@@ -1,6 +1,5 @@
 """CLI tools and end-to-end drivers (chkls, launch.train, heat2d parity)."""
 import os
-import shutil
 import subprocess
 import sys
 
@@ -22,8 +21,6 @@ def test_chkls_cli(tmp_path, capsys):
 
 def test_launch_train_worker_restart(tmp_path):
     """launch.train direct mode: fault → rerun → resume (subprocess)."""
-    pytest.importorskip("repro.dist",
-                        reason="launch.train needs repro.dist models")
     env = dict(os.environ, PYTHONPATH="src")
     d = str(tmp_path / "t")
     base = [sys.executable, "-m", "repro.launch.train", "--arch",
