@@ -41,6 +41,49 @@ def timed_run_with_fault(mod, ckpt_dir, backend=None) -> float:
     return dt
 
 
+def compressed_store(repeats: int = 3) -> Dict[str, float]:
+    """Compressed-store datapoint: payload ratio and store-path overhead
+    of an int8-compressed FULL store (Pack-side Int8CompressTier,
+    ``Protect(compress="int8")``) vs an uncompressed FULL store of the
+    same state.  Synchronous fti so the Pack tail is inside the timing.
+
+    The byte ratio is deterministic (~0.25 + scale/index overhead); the
+    time ratio pays the quantize+roundtrip-verify cost against a 4x
+    smaller write — CI gates both (check_overhead_regression.py)."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core.context import CheckpointConfig, CheckpointContext, Protect
+
+    n = 1 << 22                      # 16 MiB of f32 payload
+    rng = np.random.default_rng(0)
+    state = {"params": {"w": jnp.asarray(rng.normal(size=n)
+                                         .astype(np.float32))}}
+    best: Dict[str, tuple] = {}
+    variants = {"full": [Protect("params/**")],
+                "int8": [Protect("params/**", compress="int8")]}
+    for tag, protects in variants.items():
+        times, nbytes = [], 0
+        for r in range(repeats):
+            d = f"/tmp/bo-compress-{tag}"
+            shutil.rmtree(d, ignore_errors=True)
+            ctx = CheckpointContext(CheckpointConfig(
+                dir=d, backend="fti", dedicated_thread=False))
+            ctx.protect(*protects)
+            t0 = time.time()
+            rep = ctx.store(state, id=1, level=1)
+            times.append(time.time() - t0)
+            nbytes = rep.bytes_payload
+            ctx.shutdown()
+            shutil.rmtree(d, ignore_errors=True)
+        best[tag] = (min(times), nbytes)
+    return {
+        "compress_full_store_s": best["full"][0],
+        "compress_int8_store_s": best["int8"][0],
+        "compress_ratio_int8": best["int8"][1] / best["full"][1],
+        "compress_store_overhead_int8": best["int8"][0] / best["full"][0],
+    }
+
+
 def run(repeats: int = 3) -> Dict[str, float]:
     natives = {"fti": heat2d_fti, "scr": heat2d_scr, "veloc": heat2d_veloc}
     out: Dict[str, float] = {}
@@ -53,6 +96,7 @@ def run(repeats: int = 3) -> Dict[str, float]:
         out[f"native_{backend}_s"] = t_native
         out[f"openchk_{backend}_s"] = t_openchk
         out[f"overhead_ratio_{backend}"] = t_openchk / t_native
+    out.update(compressed_store(repeats=repeats))
     return out
 
 

@@ -7,6 +7,15 @@ the committed baseline. Fails on a >25 % slowdown of any ratio; ratios at
 or under the absolute noise floor never fail. Writes the fresh numbers as
 a JSON artifact so CI uploads them per run.
 
+Also gates the compressed-store datapoint (``Protect(compress="int8")``):
+
+- ``compress_ratio_int8`` — int8/uncompressed payload bytes.  Nearly
+  deterministic (codec math, not wall time), so the ceiling is hard: the
+  tier must actually shrink the payload ~4x.
+- ``compress_store_overhead_int8`` — compressed/uncompressed store wall
+  time (the quantize + roundtrip-verify cost against a 4x smaller
+  write).  Noise-gated like the overhead ratios, with its own floor.
+
 Update BENCH_overhead.json in the same PR when the pipeline legitimately
 changes.
 
@@ -25,6 +34,15 @@ from benchmarks import bench_overhead
 # ratios this close to native are within the paper's envelope regardless
 # of what the baseline measured — don't fail on noise around 1.0
 ABS_FLOOR = 1.15
+# int8 payload must stay ~4x smaller; anything above this means the codec
+# stopped engaging (bytes are deterministic — no noise allowance needed)
+COMPRESS_RATIO_CEILING = 0.30
+# compressed stores pay quantize+verify CPU against a 4x smaller write;
+# the ratio's denominator (a fast uncompressed store) is noisy, so below
+# this wall-time ratio the datapoint never fails — the gate exists to
+# catch pathological regressions (accidental double-verify, device
+# round-trips in Pack), not scheduler noise
+COMPRESS_OVERHEAD_FLOOR = 4.0
 
 
 def main(argv=None) -> int:
@@ -59,6 +77,18 @@ def main(argv=None) -> int:
         if got > ABS_FLOOR and got > ref * args.threshold:
             failures.append(f"{key}: {got:.3f} vs baseline {ref:.3f} "
                             f"(> {args.threshold:.2f}x)")
+
+    # compressed-store datapoint: hard byte ceiling + noise-gated wall time
+    ratio = res.get("compress_ratio_int8")
+    if ratio is not None and ratio > COMPRESS_RATIO_CEILING:
+        failures.append(f"compress_ratio_int8: {ratio:.3f} > "
+                        f"{COMPRESS_RATIO_CEILING} (codec not engaging)")
+    ovh = res.get("compress_store_overhead_int8")
+    ref = max(base.get("compress_store_overhead_int8", 1.0), 1.0)
+    if (ovh is not None and ovh > COMPRESS_OVERHEAD_FLOOR
+            and ovh > ref * args.threshold):
+        failures.append(f"compress_store_overhead_int8: {ovh:.3f} vs "
+                        f"baseline {ref:.3f} (> {args.threshold:.2f}x)")
     if failures:
         print("store-path regression:\n" + "\n".join(failures),
               file=sys.stderr)

@@ -34,6 +34,7 @@ from repro.core.async_engine import CPDedicatedThread
 from repro.core.comm import Communicator
 from repro.core.storage import (
     CHK_FULL,
+    LoadRequest,
     StorageConfig,
     StorageEngine,
     StoreReport,
@@ -54,7 +55,8 @@ class Backend(abc.ABC):
                  dedicated_thread: Optional[bool] = None):
         self.cfg = cfg
         self.comm = comm
-        self.engine = StorageEngine(cfg, comm, compose=self.compose_tiers())
+        self.engine = StorageEngine(cfg, comm, compose=self.compose_tiers(),
+                                    pack_compose=self.compose_pack_tiers())
         self.pipeline = self.engine.pipeline
         use_cp = (self.supports_dedicated_thread if dedicated_thread is None
                   else dedicated_thread and self.supports_dedicated_thread)
@@ -72,6 +74,13 @@ class Backend(abc.ABC):
         Override to plug in custom tiers without touching the pipeline."""
         return None
 
+    def compose_pack_tiers(self) -> Optional[Callable]:
+        """Return a ``() → [PackTier, ...]`` composer for the Pack-stage
+        encoder chain (clause-consuming: compression codecs first, the CHK5
+        format tier as fallback — core/tiers.default_pack_tiers), or None
+        for the default.  Override to add codecs without touching Pack."""
+        return None
+
     def capabilities(self) -> Dict[str, Any]:
         return {
             "name": self.name,
@@ -83,24 +92,40 @@ class Backend(abc.ABC):
 
     # --- uniform surface driven by TCL -------------------------------- #
 
-    def tcl_store(self, named: Dict[str, Any], ckpt_id: int,
-                  level: int, kind: str) -> Optional[StoreReport]:
+    @staticmethod
+    def as_request(named_or_req, ckpt_id=None, level=None,
+                   kind=None) -> StoreRequest:
+        """Normalize the TCL call protocol: the single ``StoreRequest``
+        object carries everything; the old positional form
+        ``(named, ckpt_id, level, kind)`` converts to a clause-less one."""
+        if isinstance(named_or_req, StoreRequest):
+            return named_or_req
+        return StoreRequest(named=named_or_req, ckpt_id=int(ckpt_id),
+                            level=int(level), kind=kind or CHK_FULL)
+
+    def tcl_store(self, req: Any, ckpt_id: Optional[int] = None,
+                  level: Optional[int] = None,
+                  kind: Optional[str] = None) -> Optional[StoreReport]:
         """Plan on the calling thread; finish sync or on the CP thread.
         Returns None when the store was handed to the CP thread (errors
-        surface at the next directive, FTI-style)."""
+        surface at the next directive, FTI-style).
+
+        ``req`` is a :class:`StoreRequest` (clause specs included); the
+        legacy positional protocol is accepted via :meth:`as_request`."""
+        req = self.as_request(req, ckpt_id, level, kind)
         if self._cp is not None:
             # surface deferred failures BEFORE plan() touches the digest
             # chain — otherwise a dropped store leaves digests pointing at
             # data no committed checkpoint holds
             self._cp.check_errors()
-        if kind != CHK_FULL and not self.supports_diff:
+        if req.wants_diff and not self.supports_diff:
             self.stats["diff_fallbacks"] += 1
-        plan = self.pipeline.plan(StoreRequest(
-            named=named, ckpt_id=ckpt_id, level=min(level, self.max_level),
-            kind=kind, diff_supported=self.supports_diff))
+        req.level = min(req.level, self.max_level)
+        req.diff_supported = self.supports_diff
+        plan = self.pipeline.plan(req)
         if self._cp is not None:
             try:
-                self._cp.submit(ckpt_id, lambda: self._finish(plan))
+                self._cp.submit(req.ckpt_id, lambda: self._finish(plan))
             except BaseException:
                 # the tail will never run — release the plan's digest
                 # fence or the next DIFF plan blocks forever
@@ -115,7 +140,13 @@ class Backend(abc.ABC):
         self.stats["bytes"] += rep.bytes_payload
         return rep
 
-    def tcl_load(self) -> Optional[Dict[str, np.ndarray]]:
+    def tcl_load(self, req: Optional[LoadRequest] = None
+                 ) -> Optional[Dict[str, np.ndarray]]:
+        """Restore the newest restorable checkpoint's named leaves (codec
+        datasets are decoded and roundtrip-verified by the Pack tiers'
+        read side).  ``req`` carries the load-side clause specs; backends
+        that restore whole containers don't need it, but it rides the
+        uniform protocol so subclasses can consume it."""
         self.tcl_wait()
         got = self.engine.load_latest()
         if got is None:

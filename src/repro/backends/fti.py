@@ -16,7 +16,13 @@ import numpy as np
 
 from repro.backends.base import Backend
 from repro.core.comm import Communicator
-from repro.core.storage import CHK_DIFF, CHK_FULL, StorageConfig, StoreReport
+from repro.core.storage import (
+    CHK_DIFF,
+    CHK_FULL,
+    StorageConfig,
+    StoreReport,
+    StoreRequest,
+)
 
 
 class FTIBackend(Backend):
@@ -61,8 +67,9 @@ class FTIBackend(Backend):
                    differential: bool = False) -> Optional[StoreReport]:
         named = {f"p{pid}/{name}": np.asarray(arr)
                  for pid, (name, arr) in self._protected.items()}
-        kind = CHK_DIFF if differential else CHK_FULL
-        return self.tcl_store(named, ckpt_id, level, kind)
+        return self.tcl_store(StoreRequest(
+            named=named, ckpt_id=ckpt_id, level=level,
+            kind=CHK_DIFF if differential else CHK_FULL))
 
     def checkpoint_wait(self) -> None:
         self.tcl_wait()

@@ -18,7 +18,9 @@ from repro.backends.base import Backend
 from repro.core import manifest as mf
 from repro.core.comm import Communicator
 from repro.core.formats import CHK5Reader, CHK5Writer
+from repro.core.protect import to_host
 from repro.core.storage import CHK_FULL, StorageConfig, StoreReport
+from repro.core.tiers import pack_named, unpack_named
 
 
 class SCRBackend(Backend):
@@ -109,18 +111,27 @@ class SCRBackend(Backend):
 
     # ----------------------- TCL uniform surface ----------------------- #
 
-    def tcl_store(self, named, ckpt_id, level, kind) -> Optional[StoreReport]:
-        if kind != CHK_FULL:
+    def tcl_store(self, req, ckpt_id=None, level=None,
+                  kind=None) -> Optional[StoreReport]:
+        """File-mode store: SCR routes the path and writes the container
+        itself, but leaf encoding still runs the shared Pack-tier chain —
+        clause specs (compression codec, format attrs, precision) apply
+        identically on all backends.  Kind clauses fall back to FULL (SCR
+        has no checkpoint kinds)."""
+        req = self.as_request(req, ckpt_id, level, kind)
+        if req.wants_diff:
             self.stats["diff_fallbacks"] += 1      # SCR: kinds unsupported
-        self.start_checkpoint(ckpt_id, min(level, self.max_level))
+        self.start_checkpoint(req.ckpt_id, min(req.level, self.max_level))
         path = self.route_file("openchk.chk5")
+        named_host = {k: np.asarray(v)
+                      for k, v in to_host(req.named).items()}
         with CHK5Writer(path) as w:
-            w.set_attrs("", {"kind": CHK_FULL, "id": ckpt_id})
-            for name, arr in named.items():
-                w.write_dataset(f"data/{name}", np.asarray(arr))
+            w.set_attrs("", {"kind": CHK_FULL, "id": req.ckpt_id})
+            pack_named(w, named_host, req.specs,
+                       self.pipeline.pack_tiers)
         return self.complete_checkpoint(valid=True)
 
-    def tcl_load(self):
+    def tcl_load(self, req=None):
         cid = self.start_restart()
         if cid is None:
             return None
@@ -132,8 +143,7 @@ class SCRBackend(Backend):
             return None
         import io
         rd = CHK5Reader(io.BytesIO(blob))
-        named = {ds[len("data/"):]: rd.read_dataset(ds)
-                 for ds in rd.datasets() if ds.startswith("data/")}
+        named = unpack_named(rd)
         rd.close()
         self.complete_restart(True)
         return named

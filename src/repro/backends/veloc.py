@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.backends.base import Backend
 from repro.core.comm import Communicator
-from repro.core.storage import CHK_FULL, StorageConfig
+from repro.core.storage import CHK_FULL, StorageConfig, StoreRequest
 
 VELOC_SUCCESS = 0
 VELOC_FAILURE = -1
@@ -47,7 +47,8 @@ class VeloCBackend(Backend):
         named = {f"p{pid}/{n}": np.asarray(a)
                  for pid, (n, a) in self._protected.items()}
         level = 1 if self.mode == "memory" else 4
-        self.tcl_store(named, version, level, CHK_FULL)
+        self.tcl_store(StoreRequest(named=named, ckpt_id=version,
+                                    level=level, kind=CHK_FULL))
         return VELOC_SUCCESS
 
     def checkpoint_wait(self) -> int:

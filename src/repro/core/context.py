@@ -21,20 +21,34 @@ Semantics preserved from the paper:
 - the backend is selected by config/env — the same program runs on FTI,
   SCR, or VeloC (portability).
 
-Self-iterative data expressions (§5.2) appear as ``protect`` selectors:
-``ctx.protect("params/**", "opt/**", "step", "data_state/**")``.
+Self-iterative data expressions (§5.2) appear as ``protect`` specs — each
+a selector **plus the paper's per-data clauses**::
+
+    ctx.protect(Protect("params/**", kind=CHK_DIFF, compress="int8"),
+                Protect("opt/**", format="chk5", precision="bf16"),
+                Protect("step"))
+
+``kind`` maps the paper's ``kind(DIFF)`` clause per subtree (mixed-kind
+stores fall out: DIFF params + FULL optimizer in one checkpoint),
+``compress``/``format``/``precision`` drive the Pack-side tiers
+(core/tiers.py), ``axis`` carries explicit sharding-axis metadata
+(dist/sharding.py).  Plain selector strings remain accepted (deprecated)
+and convert to clause-less specs.
 """
 from __future__ import annotations
 
 import os
 from dataclasses import dataclass
-from typing import Any, List, Optional
+from typing import Any, List, Optional, Union
 
 from repro.core.comm import Communicator, LocalComm
+from repro.core.pipeline import LoadRequest, StoreRequest
+from repro.core.protect import Protect, normalize_protects
 from repro.core.storage import CHK_DIFF, CHK_FULL, StorageConfig, StoreReport
 from repro.core.tcl import TCL
 
-__all__ = ["CheckpointContext", "CheckpointConfig", "CHK_FULL", "CHK_DIFF"]
+__all__ = ["CheckpointContext", "CheckpointConfig", "CHK_FULL", "CHK_DIFF",
+           "Protect"]
 
 
 @dataclass
@@ -79,7 +93,7 @@ class CheckpointContext:
             backend_kw["dedicated_thread"] = False
         self.tcl = TCL(cfg.storage(), self.comm, cfg.backend, **backend_kw)
         self.cfg = cfg
-        self._selectors: Optional[List[str]] = None
+        self._protects: Optional[List[Protect]] = None
         self._open = True
         self.last_report: Optional[StoreReport] = None
         self.restarted: bool = False
@@ -88,9 +102,13 @@ class CheckpointContext:
     # directives
     # ------------------------------------------------------------------ #
 
-    def protect(self, *selectors: str) -> "CheckpointContext":
-        """Restrict the protected subtree (self-iterative data expressions)."""
-        self._selectors = list(selectors) if selectors else None
+    def protect(self, *specs: Union[str, Protect]) -> "CheckpointContext":
+        """Declare the protected subtrees with their per-subtree clauses
+        (self-iterative data expressions + the paper's data clauses):
+        ``Protect(selector, kind=..., compress=..., format=...,
+        precision=..., axis=...)``.  Plain selector strings are the
+        deprecated clause-less form.  No arguments → protect everything."""
+        self._protects = normalize_protects(specs)
         return self
 
     def load(self, state: Any, if_: bool = True) -> Any:
@@ -99,7 +117,8 @@ class CheckpointContext:
         self._check_open()
         if not if_:
             return state
-        restored = self.tcl.load(state, self._selectors)
+        restored = self.tcl.load(LoadRequest(
+            template=state, protects=self._protects))
         if restored is None:
             return state
         self.restarted = True
@@ -107,12 +126,15 @@ class CheckpointContext:
 
     def store(self, state: Any, *, id: int, level: int,
               kind: str = CHK_FULL, if_: bool = True) -> Optional[StoreReport]:
-        """``chk store`` — id and level are mandatory clauses (paper §4.1)."""
+        """``chk store`` — id and level are mandatory clauses (paper §4.1).
+        ``kind`` is the store-level default; a ``Protect(kind=...)`` clause
+        overrides it per subtree (mixed-kind stores)."""
         self._check_open()
         if not if_:
             return None
-        self.last_report = self.tcl.store(
-            state, int(id), int(level), kind, self._selectors)
+        self.last_report = self.tcl.store(StoreRequest(
+            tree=state, ckpt_id=int(id), level=int(level), kind=kind,
+            protects=self._protects))
         return self.last_report
 
     def store_begin(self, *, id: int, level: int,

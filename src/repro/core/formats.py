@@ -59,6 +59,21 @@ def str_to_dtype(s: str) -> np.dtype:
     return np.dtype(s)
 
 
+def resolve_precision(name: str) -> np.dtype:
+    """``Protect(precision=...)`` clause value → numpy dtype.
+
+    Accepts the clause aliases ("bf16", "fp16", "f32", …) and canonical
+    dtype strings.  bf16/fp8 need ml_dtypes (jax ships it); a missing
+    dependency surfaces as a clear error rather than a silent fallback."""
+    from repro.core.protect import PRECISIONS
+    canonical = PRECISIONS.get(name, name)
+    if canonical == "bfloat16" and "bfloat16" not in _EXTRA_DTYPES:
+        raise ValueError(
+            "precision='bf16' needs ml_dtypes for a numpy bfloat16; "
+            "it is not importable in this environment")
+    return str_to_dtype(canonical)
+
+
 class CHK5Writer:
     def __init__(self, path: str):
         self.path = path

@@ -48,22 +48,23 @@ from repro.core.diff import (
     DiffEngine,
     LeafDelta,
     apply_delta,
-    dtype_str,
     leaf_to_u32_flat,
     u32_flat_to_leaf,
 )
 from repro.core.formats import CHK5Reader, CHK5Writer
-from repro.core.protect import to_host
+from repro.core.protect import CHK_DIFF, CHK_FULL, Protect, to_host
 from repro.core.tiers import (
+    PackTier,
     Tier,
     TierContext,
+    clause_attrs,
+    decode_leaf,
+    default_pack_tiers,
     default_tier_stacks,
+    pack_named,
     recovery_ladder,
 )
 from repro.redundancy.groups import Topology
-
-CHK_FULL = "FULL"
-CHK_DIFF = "DIFF"
 
 
 @dataclass
@@ -96,13 +97,45 @@ class StoreReport:
 
 @dataclass
 class StoreRequest:
-    """What the caller wants checkpointed (input to Plan)."""
-    named: Dict[str, Any]                      # device or host arrays
-    ckpt_id: int
-    level: int
+    """What the caller wants checkpointed — the one object that rides the
+    whole stack (directive → TCL → backend → Plan) in place of the old
+    positional protocols.
+
+    The directive layer fills ``tree`` + ``protects``; TCL resolves them
+    into ``named`` (selected leaves) + ``specs`` (path → governing
+    ``Protect``); the backend stamps ``level``/``diff_supported``; Plan
+    consumes the result.  Callers below the directive layer may also build
+    one directly with ``named`` (host or device arrays)."""
+    named: Optional[Dict[str, Any]] = None     # device or host arrays
+    ckpt_id: int = 0
+    level: int = 1
     kind: str = CHK_FULL
     extra_meta: Optional[Dict[str, Any]] = None
     diff_supported: bool = True
+    tree: Any = None                           # unflattened state (directive)
+    protects: Optional[List[Protect]] = None   # clause specs (directive)
+    specs: Optional[Dict[str, Optional[Protect]]] = None  # resolved by TCL
+
+    @property
+    def wants_diff(self) -> bool:
+        """Does any part of this request ask for a DIFF checkpoint?  (The
+        capability/fallback accounting backends do — paper §3.)"""
+        if self.kind == CHK_DIFF:
+            return True
+        for s in (self.specs or {}).values():
+            if s is not None and s.kind == CHK_DIFF:
+                return True
+        return any(s.kind == CHK_DIFF for s in (self.protects or []))
+
+
+@dataclass
+class LoadRequest:
+    """What the caller wants restored (transparent-restart input): the
+    template tree plus the protection specs restricting which leaves the
+    checkpoint must supply."""
+    template: Any = None
+    protects: Optional[List[Protect]] = None
+    specs: Optional[Dict[str, Optional[Protect]]] = None  # resolved by TCL
 
 
 @dataclass
@@ -121,6 +154,7 @@ class Plan:
     extra: Dict[str, Any]                      # caller meta → manifest
     named_host: Optional[Dict[str, np.ndarray]] = None   # FULL payload
     deltas: Optional[List[LeafDelta]] = None             # DIFF payload
+    specs: Optional[Dict[str, Optional[Protect]]] = None  # clause specs
     dirty_ratio: Optional[float] = None
     promoted_full: bool = False
     t0: float = field(default_factory=time.time)
@@ -150,7 +184,7 @@ class Packed:
 
 class CheckpointPipeline:
     def __init__(self, cfg: StorageConfig, comm: Communicator,
-                 compose=None):
+                 compose=None, pack_compose=None):
         self.cfg = cfg
         self.comm = comm
         self.topo = Topology(
@@ -164,6 +198,8 @@ class CheckpointPipeline:
         self.stacks: Dict[int, List[Tier]] = (
             compose or default_tier_stacks)(self.ctx)
         self.ladder: List[Tier] = recovery_ladder(self.stacks)
+        self.pack_tiers: List[PackTier] = (
+            pack_compose or default_pack_tiers)()
         # newest FULL store whose digest update is still pending on the CP
         # thread; the CP queue is FIFO, so fencing on the newest fences all
         self._digest_fence: Optional[_PendingDigests] = None
@@ -198,22 +234,35 @@ class CheckpointPipeline:
 
     def plan(self, req: StoreRequest) -> Plan:
         """Resolve kind/level, run the on-device diff kernels, snapshot to
-        host.  The only pipeline stage that runs on the calling thread."""
+        host.  The only pipeline stage that runs on the calling thread.
+
+        Kind resolution is **per leaf**: a ``Protect(kind=...)`` clause on
+        the governing spec overrides the store-level kind, so one store can
+        carry DIFF params and a FULL optimizer (mixed-kind).  The container
+        kind is DIFF when any delta is present (the restore walk then keeps
+        searching for the FULL base of the delta'd leaves)."""
         t_plan = time.time()
         level = self.clamp_level(req.level)
         tiers = self.tier_stack(level)
-        kind = req.kind
         extra = dict(req.extra_meta or {})
         attrs: Dict[str, Any] = dict(extra)
+        specs = req.specs or {}
         deltas = None
-        named_host = None
         dirty_ratio = None
         promoted = False
 
-        if kind == CHK_DIFF and not req.diff_supported:
-            kind = CHK_FULL                 # VeloC/SCR: no checkpoint kinds
+        def eff_kind(path: str) -> str:
+            spec = specs.get(path)
+            return spec.kind if (spec is not None and spec.kind) else req.kind
+
+        diff_paths = [p for p in req.named if eff_kind(p) == CHK_DIFF]
+        if diff_paths and not req.diff_supported:
+            diff_paths = []                 # VeloC/SCR: no checkpoint kinds
             attrs["diff_fallback"] = True
-        if kind == CHK_DIFF:
+        diff_set = set(diff_paths)
+        full_paths = [p for p in req.named if p not in diff_set]
+
+        if diff_paths:
             # fence: an in-flight FULL may still owe its digest update to
             # the CP thread — wait for it so this delta diffs against the
             # post-FULL digests, never stale ones
@@ -222,34 +271,44 @@ class CheckpointPipeline:
         # from a CP-thread failure mid-plan must make finish() refuse this
         # delta, not slip past the guard
         epoch = self.diff.epoch
-        if kind == CHK_DIFF:
-            deltas, stats = self.diff.compute_deltas(req.named)
+        promoted_paths: List[str] = []
+        if diff_paths:
+            deltas, stats = self.diff.compute_deltas(
+                {p: req.named[p] for p in diff_paths})
             dirty_ratio = stats.dirty_ratio
             if deltas is None:              # above break-even: promote
-                kind = CHK_FULL
                 promoted = True
+                promoted_paths = diff_paths
+                full_paths = list(req.named)
             else:
                 attrs["base_required"] = True
+        kind = CHK_DIFF if deltas is not None else CHK_FULL
+
+        named_host = None
         pending = None
-        if kind == CHK_FULL:
-            named_host = to_host(req.named)
+        if full_paths:
+            named_host = to_host({p: req.named[p] for p in full_paths})
             # digest bookkeeping is skipped when the backend can never
-            # consume it (no checkpoint kinds) and when the promote path
-            # just computed exactly these digests; otherwise it is owed —
-            # but *deferred* to the async tail (finish), so a FULL store
-            # never pays a synchronous full-tree blockhash on the training
-            # thread just to keep a digest chain current that a later DIFF
-            # may never read.  DIFF plans fence on it (_wait_digest_fence).
+            # consume it (no checkpoint kinds) and for leaves the promote
+            # path just hashed; otherwise it is owed — but *deferred* to
+            # the async tail (finish), so a FULL store never pays a
+            # synchronous full-tree blockhash on the training thread just
+            # to keep a digest chain current that a later DIFF may never
+            # read.  DIFF plans fence on it (_wait_digest_fence).
             # Registered only after to_host succeeded — nothing between
             # here and finish()/abort_plan() can fail and leak the fence
-            if req.diff_supported and not promoted:
-                pending = _PendingDigests(named=dict(req.named))
+            promoted_set = set(promoted_paths)
+            owed = [p for p in full_paths if p not in promoted_set]
+            if req.diff_supported and owed:
+                pending = _PendingDigests(
+                    named={p: req.named[p] for p in owed})
                 with self._fence_lock:
                     self._digest_fence = pending
 
         return Plan(ckpt_id=req.ckpt_id, level=level, kind=kind, tiers=tiers,
                     root=tiers[0].root, attrs=attrs, extra=extra,
                     named_host=named_host, deltas=deltas,
+                    specs=dict(specs) if specs else None,
                     dirty_ratio=dirty_ratio, promoted_full=promoted,
                     plan_seconds=time.time() - t_plan,
                     digest_epoch=epoch if kind == CHK_DIFF else -1,
@@ -299,39 +358,37 @@ class CheckpointPipeline:
     # ------------------------------------------------------------------ #
 
     def pack(self, plan: Plan) -> Packed:
-        """Serialize the planned payload into the staging dir."""
+        """Serialize the planned payload into the staging dir: the Pack-tier
+        chain encodes FULL leaves per their clauses (compression, format
+        attrs, precision); DIFF deltas ship as compacted dirty blocks.  A
+        mixed-kind plan writes both sections into one container."""
         d = mf.begin(plan.root, plan.ckpt_id)
         path = os.path.join(d, f"rank{self.comm.rank}.chk5")
         attrs = dict(plan.attrs, level=plan.level, rank=self.comm.rank,
                      world=self.comm.world)
-        if plan.kind == CHK_DIFF:
-            nbytes = self._serialize_diff(plan.deltas, attrs, path)
-        else:
-            nbytes = self._serialize_full(plan.named_host, attrs, path)
-        return Packed(stage_dir=d, path=path, nbytes=nbytes)
-
-    def _serialize_full(self, named: Dict[str, np.ndarray],
-                        attrs: Dict[str, Any], path: str) -> int:
         with CHK5Writer(path) as w:
-            w.set_attrs("", dict(attrs, kind=CHK_FULL))
-            for name, arr in named.items():
-                w.write_dataset(f"data/{name}", np.asarray(arr),
-                                {"dtype": dtype_str(arr.dtype)})
-        return os.path.getsize(path)
+            w.set_attrs("", dict(attrs, kind=plan.kind))
+            if plan.named_host:
+                pack_named(w, plan.named_host, plan.specs, self.pack_tiers)
+            if plan.deltas:
+                self._serialize_deltas(w, plan.deltas, plan.specs)
+        return Packed(stage_dir=d, path=path,
+                      nbytes=os.path.getsize(path))
 
-    def _serialize_diff(self, deltas: List[LeafDelta],
-                        attrs: Dict[str, Any], path: str) -> int:
-        with CHK5Writer(path) as w:
-            w.set_attrs("", dict(attrs, kind=CHK_DIFF))
-            for d in deltas:
-                g = f"delta/{d.path}"
-                w.write_dataset(f"{g}/idx", d.dirty_idx)
-                w.write_dataset(f"{g}/blocks", d.payload)
-                w.write_dataset(
-                    f"{g}/digest", d.digests,
-                    {"dtype": d.dtype, "shape": d.shape,
-                     "n_blocks": d.n_blocks})
-        return os.path.getsize(path)
+    def _serialize_deltas(self, w: CHK5Writer, deltas: List[LeafDelta],
+                          specs: Optional[Dict[str, Optional[Protect]]]
+                          ) -> None:
+        specs = specs or {}
+        for d in deltas:
+            g = f"delta/{d.path}"
+            w.write_dataset(f"{g}/idx", d.dirty_idx)
+            w.write_dataset(f"{g}/blocks", d.payload)
+            # clause attrs ride the digest dataset (kind/selector/…); delta
+            # payloads are raw dirty blocks — codecs apply to FULL leaves
+            w.write_dataset(
+                f"{g}/digest", d.digests,
+                dict(clause_attrs(specs.get(d.path), CHK_DIFF),
+                     dtype=d.dtype, shape=d.shape, n_blocks=d.n_blocks))
 
     # ------------------------------------------------------------------ #
     # stage 3: Place
@@ -374,11 +431,12 @@ class CheckpointPipeline:
     # ------------------------------------------------------------------ #
 
     def _plan_leaf_paths(self, plan: Plan):
+        paths: List[str] = []
         if plan.named_host is not None:
-            return list(plan.named_host)
+            paths += list(plan.named_host)
         if plan.deltas is not None:
-            return [d.path for d in plan.deltas]
-        return plan.extra.get("parts", [])
+            paths += [d.path for d in plan.deltas]
+        return paths or plan.extra.get("parts", [])
 
     def finish(self, plan: Plan) -> StoreReport:
         """The asynchronous tail: Pack → Place → Commit.
@@ -536,16 +594,16 @@ class CheckpointPipeline:
         for blob, man in chain:
             bb = man.get("block_bytes", self.cfg.block_bytes)
             rd = CHK5Reader(io.BytesIO(blob))
-            if man.get("kind") == CHK_FULL:
-                for ds in rd.datasets():
-                    if ds.startswith("data/"):
-                        name = ds[len("data/"):]
-                        named[name] = rd.read_dataset(ds)
-                flat_u32.clear()
-            else:
-                for ds in rd.datasets():
-                    if not ds.endswith("/digest"):
-                        continue
+            # one pass handles FULL, DIFF *and* mixed containers: a full
+            # dataset supersedes any older delta replay of the same leaf,
+            # a delta replays onto whatever base the chain built so far
+            for ds in rd.datasets():
+                if ds.startswith("data/"):
+                    name = ds[len("data/"):]
+                    named[name] = decode_leaf(rd, ds)
+                    flat_u32.pop(name, None)
+                    meta_shape.pop(name, None)
+                elif ds.startswith("delta/") and ds.endswith("/digest"):
                     name = ds[len("delta/"): -len("/digest")]
                     info = rd.info(ds)["attrs"]
                     idx = rd.read_dataset(f"delta/{name}/idx")
@@ -554,7 +612,6 @@ class CheckpointPipeline:
                         if name not in named:
                             return None     # chain broken
                         flat_u32[name] = leaf_to_u32_flat(named[name], bb)
-                        meta_shape[name] = (info["dtype"], info["shape"])
                     flat_u32[name] = apply_delta(flat_u32[name], idx, blocks, bb)
                     meta_shape[name] = (info["dtype"], info["shape"])
             rd.close()

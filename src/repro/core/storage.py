@@ -31,25 +31,29 @@ from repro.core.pipeline import (           # re-exported for compatibility
     CHK_DIFF,
     CHK_FULL,
     CheckpointPipeline,
+    LoadRequest,
     Packed,
     Plan,
     StorageConfig,
     StoreReport,
     StoreRequest,
 )
+from repro.core.protect import Protect      # noqa: F401  (re-export)
 
-__all__ = ["CHK_FULL", "CHK_DIFF", "CheckpointPipeline", "Packed", "Plan",
-           "StorageConfig", "StoreReport", "StoreRequest", "StorageEngine"]
+__all__ = ["CHK_FULL", "CHK_DIFF", "CheckpointPipeline", "LoadRequest",
+           "Packed", "Plan", "Protect", "StorageConfig", "StoreReport",
+           "StoreRequest", "StorageEngine"]
 
 
 class StorageEngine:
     """Facade: one object exposing the pipeline's write/read path."""
 
     def __init__(self, cfg: StorageConfig, comm: Communicator,
-                 compose=None):
+                 compose=None, pack_compose=None):
         self.cfg = cfg
         self.comm = comm
-        self.pipeline = CheckpointPipeline(cfg, comm, compose=compose)
+        self.pipeline = CheckpointPipeline(cfg, comm, compose=compose,
+                                           pack_compose=pack_compose)
         self.topo = self.pipeline.topo
         self.diff = self.pipeline.diff
 

@@ -2,14 +2,19 @@
 
 TCL sits between the directives (context.py) and the backends: it owns
 serialization (pytree ⇄ named arrays — the work Mercurium + TCL share in
-the paper), forwards requests to the selected backend in the backend's
-native call protocol, and performs transparent restart detection.
+the paper), resolves the directive's ``Protect`` clause specs over the
+flattened tree, and forwards one :class:`StoreRequest` / :class:`LoadRequest`
+object to the selected backend — the clauses survive the whole stack
+instead of being flattened into positional arguments.
 
 TCL hands the backend the *device-side* protected leaves; the pipeline's
 Plan stage (core/pipeline.py) then runs the on-device hash/pack kernels and
 takes the device→host snapshot on this thread, in submission order — the
 synchronous cost the paper budgets for §4.2.2 — before the Pack → Place →
 Commit tail goes to a CP-dedicated thread when the backend has one.
+
+The pre-clause positional protocol (``store(tree, ckpt_id, level, kind,
+selectors)``) remains accepted and converts to a clause-less request.
 """
 from __future__ import annotations
 
@@ -21,7 +26,13 @@ import numpy as np
 from repro.backends.base import Backend
 from repro.backends.registry import make_backend
 from repro.core.comm import Communicator
-from repro.core.protect import flatten_named, select, unflatten_named
+from repro.core.pipeline import LoadRequest, StoreRequest
+from repro.core.protect import (
+    flatten_named,
+    normalize_protects,
+    resolve_specs,
+    unflatten_named,
+)
 from repro.core.storage import CHK_FULL, StorageConfig, StoreReport
 
 
@@ -33,33 +44,46 @@ class TCL:
 
     # ------------------------------------------------------------------ #
 
-    def store(self, tree: Any, ckpt_id: int, level: int, kind: str = CHK_FULL,
-              selectors: Optional[List[str]] = None) -> Optional[StoreReport]:
-        """Select the protected leaves and forward to the backend.
+    def store(self, req: Any, ckpt_id: Optional[int] = None,
+              level: Optional[int] = None, kind: str = CHK_FULL,
+              selectors: Optional[List[str]] = None
+              ) -> Optional[StoreReport]:
+        """Resolve the request's clause specs over the flattened tree and
+        forward the one request object to the backend.
 
         Leaves stay on device here: the pipeline's Plan stage performs the
-        snapshot (and, for CHK_DIFF, the on-device hash/pack) synchronously;
-        everything after may be asynchronous."""
-        named_dev = select(flatten_named(tree)[0], selectors)
-        return self.backend.tcl_store(named_dev, ckpt_id, level, kind)
+        snapshot (and, for CHK_DIFF subtrees, the on-device hash/pack)
+        synchronously; everything after may be asynchronous."""
+        if not isinstance(req, StoreRequest):    # legacy positional protocol
+            req = StoreRequest(tree=req, ckpt_id=int(ckpt_id),
+                               level=int(level), kind=kind,
+                               protects=normalize_protects(selectors))
+        if req.named is None:
+            named_all, _ = flatten_named(req.tree)
+            req.specs = resolve_specs(named_all, req.protects)
+            req.named = {p: named_all[p] for p in req.specs}
+        return self.backend.tcl_store(req)
 
     def store_begin(self, ckpt_id: int, level: int):
         """Open an incremental store (§8) on the backend's pipeline — parts
         are added as they become ready; commit may be asynchronous."""
         return self.backend.tcl_store_begin(ckpt_id, level)
 
-    def load(self, template: Any,
+    def load(self, req: Any,
              selectors: Optional[List[str]] = None) -> Optional[Any]:
-        """Transparent restart: returns a tree shaped like ``template`` with
-        restored leaves, or None when no checkpoint exists."""
-        named_t, treedef = flatten_named(template)
-        chosen = select(named_t, selectors)
-        restored = self.backend.tcl_load()
+        """Transparent restart: returns a tree shaped like the request's
+        template with restored leaves, or None when no checkpoint exists."""
+        if not isinstance(req, LoadRequest):     # legacy positional protocol
+            req = LoadRequest(template=req,
+                              protects=normalize_protects(selectors))
+        named_t, treedef = flatten_named(req.template)
+        req.specs = resolve_specs(named_t, req.protects)
+        restored = self.backend.tcl_load(req)
         if restored is None:
             return None
         merged: Dict[str, Any] = {}
         for path, leaf in named_t.items():
-            if path in chosen:
+            if path in req.specs:
                 if path not in restored:
                     raise KeyError(f"checkpoint missing protected leaf {path!r}")
                 arr = restored[path]
@@ -80,7 +104,7 @@ class TCL:
                     arr, getattr(leaf, "sharding", None))
             else:
                 merged[path] = leaf
-        return unflatten_named(treedef, merged, template)
+        return unflatten_named(treedef, merged, req.template)
 
     def wait(self) -> None:
         self.backend.tcl_wait()

@@ -21,17 +21,45 @@ the recovery ladder tries every tier in level order L1 → L2 → L3 → L4.
 Backends select/compose stacks via ``Backend.compose_tiers`` — adding a new
 tier (compression, object store, multi-node batching) means subclassing
 ``Tier`` and composing it into a stack; nothing in the pipeline changes.
+
+A :class:`PackTier` is the Pack-stage analogue: it encodes one planned
+leaf into container datasets according to the leaf's ``Protect`` clauses
+(core/protect.py) and decodes it back on restore.  Two built-ins consume
+the clause system:
+
+    ``Int8CompressTier``   ``compress="int8"`` — per-block max-abs int8
+                           quantization (dist/compression.py), roundtrip
+                           computed at pack time and crc-verified on load
+    ``CHK5FormatTier``     the always-on format tier: plain CHK5 dataset
+                           write, clause attrs recorded as dataset
+                           attributes, ``precision`` casts applied
+
+Pack tiers are *per-leaf* and self-describing: decode dispatches on the
+``codec`` dataset attribute, so a reader needs no Protect specs — any
+CHK5 container (and ``chkls --json``) shows exactly how each dataset was
+encoded.  Backends compose them via ``Backend.compose_pack_tiers``.
 """
 from __future__ import annotations
 
 import abc
 import json
 import os
-from typing import Dict, List, Optional
+import zlib
+from typing import Any, Dict, List, Optional
+
+import numpy as np
 
 from repro.core import manifest as mf
 from repro.core.comm import Communicator
-from repro.core.formats import CHK5CorruptionError, CHK5Reader
+from repro.core.formats import (
+    CHK5CorruptionError,
+    CHK5Reader,
+    CHK5Writer,
+    dtype_to_str,
+    resolve_precision,
+    str_to_dtype,
+)
+from repro.core.protect import CHK_FULL, Protect
 from repro.redundancy import erasure
 from repro.redundancy.groups import Topology
 from repro.redundancy.partner import (
@@ -302,3 +330,192 @@ def recovery_ladder(stacks: Dict[int, List[Tier]]) -> List[Tier]:
         for t in stacks[lvl]:
             seen.setdefault(t.name, t)
     return sorted(seen.values(), key=lambda t: t.level)
+
+
+# -------------------------------------------------------------------------- #
+# Pack-side tiers — per-leaf encoders driven by Protect clauses
+# -------------------------------------------------------------------------- #
+
+_AUX_GROUP = "codecaux"          # side-channel datasets (e.g. int8 scales)
+
+
+def clause_attrs(spec: Optional[Protect], eff_kind: str) -> Dict[str, Any]:
+    """The dataset attributes the CHK5 format tier records for one leaf:
+    the *effective* kind plus every clause the governing spec carried.
+    ``compress`` is recorded as ``codec`` only by the codec tier itself
+    (on success), so the attr always reflects what is actually on disk."""
+    attrs: Dict[str, Any] = {"kind": eff_kind}
+    if spec is not None:
+        attrs["selector"] = spec.selector
+        for k, v in spec.clauses().items():
+            if k in ("kind", "compress"):
+                continue
+            attrs[k] = v
+    return attrs
+
+
+class PackTier(abc.ABC):
+    """One Pack-stage encoder: leaf + Protect spec → container datasets."""
+
+    name: str = "?"
+
+    @abc.abstractmethod
+    def wants(self, spec: Optional[Protect]) -> bool:
+        """Does this tier handle a leaf governed by ``spec``?"""
+
+    @abc.abstractmethod
+    def encode(self, w: CHK5Writer, name: str, arr: np.ndarray,
+               spec: Optional[Protect], attrs: Dict[str, Any]) -> None:
+        """Write ``data/<name>`` (plus any aux datasets) into ``w``."""
+
+
+class CHK5FormatTier(PackTier):
+    """The always-on format tier (paper §4.2.4: checkpoints double as
+    analyzable datasets).  Records the leaf's clause attrs as dataset
+    attributes and applies the ``precision`` cast (restore casts back to
+    the recorded original dtype)."""
+
+    name = "chk5"
+
+    def wants(self, spec: Optional[Protect]) -> bool:
+        return True
+
+    def encode(self, w, name, arr, spec, attrs):
+        arr = np.asarray(arr)
+        attrs = dict(attrs, dtype=dtype_to_str(arr.dtype))
+        if spec is not None and spec.precision is not None:
+            target = resolve_precision(spec.precision)
+            if not np.issubdtype(arr.dtype, np.floating):
+                # ints/bools keep their bits; record why the cast was skipped
+                attrs.pop("precision", None)
+                attrs["precision_fallback"] = (
+                    f"{spec.precision}: non-float leaf "
+                    f"({dtype_to_str(arr.dtype)})")
+            elif arr.dtype != target:
+                arr = arr.astype(target)
+            # already at target precision: the clause is honored as-is —
+            # keep the attr, nothing to cast
+        w.write_dataset(f"data/{name}", arr, attrs)
+
+
+class Int8CompressTier(PackTier):
+    """``compress="int8"`` — per-block max-abs int8 quantization of the
+    packed payload (dist/compression.py), the ROADMAP's compressed-payload
+    tier.  Lossy by construction (elementwise error ≤ max|block|/127), so:
+
+    - the *dequantized* payload is computed at pack time and its crc32
+      recorded — load dequantizes and verifies against it, making the
+      restore path roundtrip-verified end to end;
+    - a spec ``max_error`` bound makes the tier fall back to an
+      uncompressed write when the observed relative-L2 roundtrip error
+      exceeds it (recorded in ``codec_fallback``);
+    - non-float leaves always fall back (quantizing step counters or bit
+      payloads is meaningless).
+    """
+
+    name = "int8"
+    codec = "int8"
+
+    def wants(self, spec: Optional[Protect]) -> bool:
+        return spec is not None and spec.compress == self.codec
+
+    def encode(self, w, name, arr, spec, attrs):
+        from repro.dist.compression import (
+            BLOCK, dequantize_int8_np, quantize_int8_np)
+        arr = np.asarray(arr)
+        if not np.issubdtype(arr.dtype, np.floating):
+            CHK5FormatTier().encode(w, name, arr, spec, dict(
+                attrs, codec_fallback=(
+                    f"int8: non-float leaf ({dtype_to_str(arr.dtype)})")))
+            return
+        orig = arr
+        if spec.precision is not None:
+            # the precision clause composes with the codec: quantize the
+            # precision-limited values (same store-side cast the format
+            # tier applies), restore still casts back to the original
+            target = resolve_precision(spec.precision)
+            if arr.dtype != target:
+                arr = arr.astype(target)
+        q, scale = quantize_int8_np(arr)
+        back = dequantize_int8_np(q, scale, arr.shape).astype(orig.dtype)
+        a64 = orig.astype(np.float64).reshape(-1)
+        err = float(np.linalg.norm(back.astype(np.float64).reshape(-1) - a64)
+                    / max(float(np.linalg.norm(a64)), 1e-12))
+        if spec.max_error is not None and err > spec.max_error:
+            CHK5FormatTier().encode(w, name, orig, spec, dict(
+                attrs, codec_fallback=(
+                    f"int8: roundtrip error {err:.3e} > "
+                    f"max_error {spec.max_error:.3e}")))
+            return
+        attrs = dict(attrs, codec=self.codec, codec_block=BLOCK,
+                     codec_error=err, dtype=dtype_to_str(orig.dtype),
+                     shape=[int(x) for x in orig.shape],
+                     roundtrip_crc32=zlib.crc32(back.tobytes()) & 0xFFFFFFFF)
+        w.write_dataset(f"data/{name}", q, attrs)
+        w.write_dataset(f"{_AUX_GROUP}/{name}/scale", scale)
+
+
+def default_pack_tiers() -> List[PackTier]:
+    """Clause-priority order: codecs first, the format tier as fallback."""
+    return [Int8CompressTier(), CHK5FormatTier()]
+
+
+def pack_named(w: CHK5Writer, named_host: Dict[str, np.ndarray],
+               specs: Optional[Dict[str, Optional[Protect]]],
+               pack_tiers: Optional[List[PackTier]] = None,
+               default_kind: str = CHK_FULL) -> None:
+    """Run the Pack-tier chain over every leaf (first tier that ``wants``
+    the governing spec encodes it)."""
+    tiers = pack_tiers if pack_tiers is not None else default_pack_tiers()
+    specs = specs or {}
+    for name, arr in named_host.items():
+        spec = specs.get(name)
+        attrs = clause_attrs(spec, default_kind)
+        for tier in tiers:
+            if tier.wants(spec):
+                tier.encode(w, name, np.asarray(arr), spec, attrs)
+                break
+        else:
+            # a silently dropped leaf would only surface at restore time;
+            # fail the store where the misconfiguration is
+            raise RuntimeError(
+                f"no pack tier accepted leaf {name!r} (spec {spec!r}) — "
+                f"compose_pack_tiers chains must end with a catch-all "
+                f"(CHK5FormatTier)")
+
+
+def decode_leaf(rd: CHK5Reader, ds_name: str) -> np.ndarray:
+    """Decode one ``data/...`` dataset, dispatching on its ``codec`` attr
+    (self-describing — no Protect specs needed at restore)."""
+    meta = rd.info(ds_name)
+    attrs = meta.get("attrs", {})
+    codec = attrs.get("codec")
+    if codec == Int8CompressTier.codec:
+        from repro.dist.compression import dequantize_int8_np
+        name = ds_name[len("data/"):]
+        q = rd.read_dataset(ds_name)
+        scale = rd.read_dataset(f"{_AUX_GROUP}/{name}/scale")
+        arr = dequantize_int8_np(q, scale, attrs["shape"]).astype(
+            str_to_dtype(attrs["dtype"]))
+        got = zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+        if got != attrs["roundtrip_crc32"]:
+            raise CHK5CorruptionError(
+                f"{rd.path}:{ds_name}: int8 codec roundtrip mismatch "
+                f"(crc {got:#x} != recorded {attrs['roundtrip_crc32']:#x})")
+        return arr
+    if codec is not None:
+        raise CHK5CorruptionError(
+            f"{rd.path}:{ds_name}: unknown payload codec {codec!r}")
+    arr = rd.read_dataset(ds_name)
+    if "precision" in attrs and "dtype" in attrs:
+        arr = arr.astype(str_to_dtype(attrs["dtype"]))
+    return arr
+
+
+def unpack_named(rd: CHK5Reader) -> Dict[str, np.ndarray]:
+    """Decode every ``data/...`` dataset of a container → {path: array}."""
+    out: Dict[str, np.ndarray] = {}
+    for ds in rd.datasets():
+        if ds.startswith("data/"):
+            out[ds[len("data/"):]] = decode_leaf(rd, ds)
+    return out

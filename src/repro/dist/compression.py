@@ -15,6 +15,7 @@ import math
 from typing import Sequence, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 BLOCK = 1024
 
@@ -47,3 +48,32 @@ def compress_roundtrip_error(g: jnp.ndarray, block: int = BLOCK) -> jnp.ndarray:
     back = dequantize_int8(q, s, g.shape)
     denom = jnp.maximum(jnp.linalg.norm(g.reshape(-1)), 1e-12)
     return jnp.linalg.norm((back - g).reshape(-1)) / denom
+
+
+# -------------------------------------------------------------------------- #
+# host-side (numpy) variants — the checkpoint Pack stage runs after the
+# device→host snapshot, on the CP-dedicated thread; keep it off the device
+# -------------------------------------------------------------------------- #
+
+
+def quantize_int8_np(a: np.ndarray, block: int = BLOCK
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Numpy mirror of :func:`quantize_int8` for Pack-side payload
+    compression (core/tiers.Int8CompressTier).  Bit-identical semantics:
+    per-block max-abs scale, zero blocks round-trip exactly."""
+    flat = np.asarray(a).reshape(-1).astype(np.float32)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = np.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = (np.max(np.abs(blocks), axis=1) / 127.0).astype(np.float32)
+    safe = np.where(scale > 0.0, scale, 1.0)[:, None]
+    q = np.where(scale[:, None] > 0.0, np.round(blocks / safe), 0.0)
+    return np.clip(q, -127, 127).astype(np.int8), scale
+
+
+def dequantize_int8_np(q: np.ndarray, scale: np.ndarray,
+                       shape: Sequence[int]) -> np.ndarray:
+    """Inverse of :func:`quantize_int8_np` (drops the block padding)."""
+    flat = (q.astype(np.float32) * np.asarray(scale)[:, None]).reshape(-1)
+    return flat[: math.prod(shape)].reshape(tuple(shape))

@@ -25,15 +25,13 @@ from __future__ import annotations
 from typing import Any, List, Optional, Sequence, Tuple
 
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.tree_util import keystr, tree_map_with_path
+from jax.tree_util import tree_map_with_path
 
+# the canonical slash-path form is core/protect.py's — one implementation,
+# so selector matching and rule lookup agree on names like "w.q" that the
+# old per-module strip("[]'\".") mangled
+from repro.core.protect import Protect, _path_str
 from repro.dist.context import MODEL, data_axes, resolve_spec
-
-
-def _path_str(path) -> str:
-    """KeyPath → canonical slash path (same form as core/protect.py):
-    ``('groups', 0, 'attn', 'wq')`` → ``"groups/0/attn/wq"``."""
-    return "/".join(keystr((k,)).strip("[]'\".") for k in path)
 
 
 # column-parallel (output features on MODEL) / row-parallel (input features)
@@ -104,8 +102,18 @@ def batch_sharding(mesh: Mesh, ndim: int, *,
 
 
 def cache_shardings(mesh: Mesh, caches: Any, global_batch: int, *,
-                    seq_axis_sharded: bool = False) -> Any:
+                    seq_axis_sharded: bool = False,
+                    protects: Optional[Sequence[Protect]] = None) -> Any:
     """Decode-cache shardings (stacked ``(L, B, C, ...)`` leaves).
+
+    The batch dim is located by **explicit axis metadata first**: a
+    ``Protect(selector, axis={"batch": d})`` spec from the cache
+    constructor (``models/zoo.Model.cache_protects``) pins the batch dim
+    for every matching leaf; only leaves with no governing spec fall back
+    to the size-match heuristic (first dim equal to ``global_batch`` —
+    ambiguous when e.g. a head count or window equals the batch size).
+    An explicit dim outside the leaf's rank (shape-(0,) cache-union
+    placeholders) falls back too.
 
     Default: shard the batch dim over the folded data axes. With
     ``seq_axis_sharded`` (long-context, batch too small to split) the
@@ -120,18 +128,28 @@ def cache_shardings(mesh: Mesh, caches: Any, global_batch: int, *,
         for a in (daxis if isinstance(daxis, tuple) else (daxis,)):
             dsize *= mesh.shape[a]
     tp = mesh.shape.get(MODEL, 1)
+    specs = [s for s in (protects or []) if s.axis and "batch" in s.axis]
 
-    def one(leaf):
+    def one(path, leaf):
         shape = leaf.shape
         dims: list = [None] * len(shape)
-        bdim = next((i for i, d in enumerate(shape) if d == global_batch),
-                    None)
+        p = _path_str(path)
+        bdim = None
+        for spec in specs:
+            if spec.matches(p):
+                d = spec.axis["batch"]
+                if 0 <= d < len(shape):
+                    bdim = d
+                break
+        if bdim is None:
+            bdim = next((i for i, d in enumerate(shape)
+                         if d == global_batch), None)
         if bdim is not None and daxis is not None:
             if seq_axis_sharded:
                 sdim = bdim + 1
                 if sdim < len(shape) and shape[sdim] % dsize == 0:
                     dims[sdim] = daxis
-            elif global_batch % dsize == 0:
+            elif shape[bdim] % dsize == 0:
                 dims[bdim] = daxis
         if bdim is not None and MODEL in mesh.axis_names:
             hdim = bdim + 2
@@ -140,5 +158,4 @@ def cache_shardings(mesh: Mesh, caches: Any, global_batch: int, *,
                 dims[hdim] = MODEL
         return NamedSharding(mesh, P(*dims))
 
-    import jax
-    return jax.tree.map(one, caches)
+    return tree_map_with_path(one, caches)

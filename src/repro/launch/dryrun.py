@@ -190,7 +190,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             cstruct = model.cache_struct(shape.global_batch, shape.seq_len)
             seq_sharded = shape.global_batch == 1
             cshard = cache_shardings(mesh, cstruct, shape.global_batch,
-                                     seq_axis_sharded=seq_sharded)
+                                     seq_axis_sharded=seq_sharded,
+                                     protects=model.cache_protects())
             tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jax.numpy.int32)
             tshard = batch_sharding(
                 mesh, 2, batch_divisible=shape.global_batch > 1)

@@ -240,6 +240,16 @@ def cache_struct(batch: int, cfg: ArchConfig, max_len: int) -> Any:
         functools.partial(init_caches, batch, cfg, max_len))
 
 
+def cache_protects(selector: str = "**") -> list:
+    """Explicit axis metadata for :func:`init_caches` pytrees, carried as
+    ``Protect`` axis clauses: every leaf is stacked ``(n_groups, B, ...)``,
+    so batch is dim 1 — no size-match guessing needed
+    (``dist/sharding.cache_shardings`` consumes this before falling back
+    to its heuristic)."""
+    from repro.core.protect import Protect
+    return [Protect(selector, axis={"batch": 1})]
+
+
 def lm_decode_step(
     params: Params,
     token: jnp.ndarray,                        # (B, 1) int32

@@ -29,6 +29,9 @@ class Model:
     init_caches: Callable[..., Any]            # (batch, max_len) → caches
     cache_struct: Callable[..., Any]
     decode_step: Callable[..., Any]            # (params, token, caches, pos)
+    cache_protects: Callable[[], Any] = lm_mod.cache_protects
+    # () → [Protect]: explicit batch-axis metadata for the cache pytree
+    # (both families stack layers in dim 0, batch in dim 1)
 
 
 def _lm_forward(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig,

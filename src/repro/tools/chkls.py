@@ -1,16 +1,33 @@
 """``python -m repro.tools.chkls <file.chk5>`` — inspect CHK5 containers.
 
 The paper's HDF5 argument: checkpoints double as analyzable datasets, with
-standard tools. This is that tool for CHK5.
+standard tools. This is that tool for CHK5.  Clause-carrying stores
+(core/protect.Protect) record their clauses as dataset attributes — the
+listing shows the interesting ones (codec, kind, precision, fallbacks) and
+``--json`` emits the full machine-readable inventory so CI can assert on
+container contents.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 import numpy as np
 
 from repro.core.formats import CHK5Reader
+
+#: clause/codec attrs worth a column in the human listing
+_CLAUSE_ATTRS = ("codec", "kind", "precision", "codec_fallback",
+                 "precision_fallback")
+
+
+def _clause_str(attrs: dict) -> str:
+    parts = []
+    for k in _CLAUSE_ATTRS:
+        if k in attrs:
+            parts.append(f"{k}={attrs[k]}")
+    return " ".join(parts)
 
 
 def main(argv=None) -> int:
@@ -19,9 +36,31 @@ def main(argv=None) -> int:
     ap.add_argument("--verify", action="store_true", help="check all crc32s")
     ap.add_argument("--stats", action="store_true",
                     help="per-dataset min/max/mean for float data")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable inventory (attrs included)")
     args = ap.parse_args(argv)
 
     rd = CHK5Reader(args.file, verify=args.verify)
+
+    if args.as_json:
+        datasets = []
+        for name in rd.datasets():
+            m = rd.info(name)
+            datasets.append({"name": name, "dtype": m["dtype"],
+                             "shape": list(m["shape"]),
+                             "nbytes": m["nbytes"],
+                             "attrs": m.get("attrs", {})})
+        inv = {
+            "file": args.file,
+            "attrs": rd.attrs(""),
+            "datasets": datasets,
+            "total_bytes": sum(d["nbytes"] for d in datasets),
+            "verified": bool(args.verify),
+        }
+        print(json.dumps(inv, indent=1, sort_keys=True))
+        rd.close()
+        return 0
+
     root_attrs = rd.attrs("")
     if root_attrs:
         print(f"attrs: {root_attrs}")
@@ -31,6 +70,9 @@ def main(argv=None) -> int:
         total += m["nbytes"]
         line = (f"  {name:60s} {m['dtype']:>10s} "
                 f"{str(tuple(m['shape'])):>20s} {m['nbytes']:>12,d} B")
+        clauses = _clause_str(m.get("attrs", {}))
+        if clauses:
+            line += f"  [{clauses}]"
         if args.stats and m["dtype"] != "bytes":
             try:
                 a = rd.read_dataset(name).astype(np.float32)

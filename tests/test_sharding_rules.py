@@ -67,6 +67,29 @@ SCRIPT = textwrap.dedent("""
         with constraint_hints(False):
             assert shard_hint(x, "data", None) is x
 
+    # 6) cache shardings: an explicit Protect axis clause pins the batch
+    # dim; the size heuristic only covers unmatched leaves.  Ambiguous
+    # case: global_batch == n_groups == 4, so the heuristic would shard
+    # the layer-stack dim (dim 0) instead of batch (dim 1).
+    from repro.core.protect import Protect
+    from repro.dist.sharding import cache_shardings
+    amb = {"kv": jnp.zeros((4, 8, 4, 64))}    # (n_groups, B=8, heads, dh)
+    cs_h = jax.tree.leaves(cache_shardings(mesh, amb, 4))[0]
+    assert cs_h.spec == P("data", None, "model", None), cs_h.spec
+    cs_e = jax.tree.leaves(cache_shardings(
+        mesh, amb, 4, protects=[Protect("**", axis={"batch": 1})]))[0]
+    assert cs_e.spec == P(None, "data", None, "model"), cs_e.spec
+    # out-of-range explicit dim (cache-union placeholders) → heuristic
+    ph = jax.tree.leaves(cache_shardings(
+        mesh, {"z": jnp.zeros((0,))}, 4,
+        protects=[Protect("**", axis={"batch": 1})]))[0]
+    assert ph.spec == P(None) or ph.spec == P(), ph.spec
+    # the cache constructors publish the metadata (models/zoo carrier)
+    from repro.models.zoo import build_model as bm
+    mdl = bm(get_arch("mixtral-8x7b"))
+    specs = mdl.cache_protects()
+    assert specs and specs[0].axis == {"batch": 1}
+
     print("SHARDING-OK")
 """)
 

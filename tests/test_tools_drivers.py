@@ -19,6 +19,37 @@ def test_chkls_cli(tmp_path, capsys):
     assert "data/a" in out and "crc OK" in out and "μ=" in out
 
 
+def test_chkls_json_and_clause_attrs(tmp_path, capsys):
+    """--json emits a machine-readable inventory (attrs included) and the
+    human listing shows clause attrs — what CI asserts container contents
+    with."""
+    import json
+    from repro.core.formats import CHK5Writer
+    from repro.core.protect import Protect
+    from repro.core.tiers import pack_named
+    from repro.tools.chkls import main as chkls_main
+    p = str(tmp_path / "c.chk5")
+    with CHK5Writer(p) as w:
+        w.set_attrs("", {"kind": "FULL", "id": 4})
+        pack_named(w, {"params/w": np.linspace(-1, 1, 2048, dtype=np.float32),
+                       "step": np.int32(7)},
+                   {"params/w": Protect("params/**", compress="int8"),
+                    "step": None})
+    assert chkls_main([p, "--json", "--verify"]) == 0
+    inv = json.loads(capsys.readouterr().out)
+    assert inv["attrs"] == {"kind": "FULL", "id": 4}
+    by = {d["name"]: d for d in inv["datasets"]}
+    assert by["data/params/w"]["attrs"]["codec"] == "int8"
+    assert by["data/params/w"]["dtype"] == "|i1"
+    assert "codec" not in by["data/step"]["attrs"]
+    assert inv["verified"] is True
+    assert inv["total_bytes"] == sum(d["nbytes"] for d in inv["datasets"])
+    # human listing shows the clause column
+    assert chkls_main([p]) == 0
+    out = capsys.readouterr().out
+    assert "codec=int8" in out and "kind=FULL" in out
+
+
 def test_launch_train_worker_restart(tmp_path):
     """launch.train direct mode: fault → rerun → resume (subprocess)."""
     env = dict(os.environ, PYTHONPATH="src")
