@@ -6,7 +6,12 @@ OpenCHK/native should be ≈1 (paper: within noise, <2 % worst case).
 """
 from __future__ import annotations
 
+import json
+import os
 import shutil
+import subprocess
+import sys
+import textwrap
 import time
 from typing import Dict
 
@@ -84,6 +89,76 @@ def compressed_store(repeats: int = 3) -> Dict[str, float]:
     }
 
 
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import os, sys, json, time, shutil
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.context import CheckpointConfig, CheckpointContext
+
+    repeats = max(int(sys.argv[1]), 5)
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    n = 1 << 12                       # 4096x4096 f32 = 64 MiB of payload
+    host = np.arange(n * n, dtype=np.float32).reshape(n, n)
+    sh = NamedSharding(mesh, P("data", "model"))
+
+    # veloc (sync): no digest bookkeeping, so the timing isolates the
+    # snapshot+pack+commit path the datapoint is about; a fresh device
+    # array per repeat keeps jax's cached host copy from flattering the
+    # gather variant
+    def one_store(tag, sharded):
+        w = jax.device_put(host, sh)
+        jax.block_until_ready(w)
+        d = f"/tmp/bo-shard-{tag}"
+        shutil.rmtree(d, ignore_errors=True)
+        ctx = CheckpointContext(CheckpointConfig(
+            dir=d, backend="veloc", dedicated_thread=False,
+            sharded_snapshot=sharded))
+        os.sync()       # settle writeback: fsync inside the store must not
+        t0 = time.time()    # pay for the previous variant's dirty pages
+        ctx.store({"w": w}, id=1, level=1)
+        dt = time.time() - t0
+        ctx.shutdown()
+        shutil.rmtree(d, ignore_errors=True)
+        return dt
+
+    variants = (("sharded", True), ("gathered", False))
+    for tag, sharded in variants:
+        one_store(tag, sharded)                   # warmup: jit + page cache
+    times = {tag: [] for tag, _ in variants}
+    for r in range(repeats):                      # interleave: shared drift
+        for tag, sharded in variants:             # hits both variants alike
+            times[tag].append(one_store(tag, sharded))
+    out = {f"{tag}_store_s": min(ts) for tag, ts in times.items()}
+    print("RESULT " + json.dumps(out))
+""")
+
+
+def sharded_store(repeats: int = 3) -> Dict[str, float]:
+    """Sharded-store datapoint on the forced-16-device mesh: one store of
+    a 64 MiB leaf sharded 4x4, snapshotting per-shard (shard-local Plan +
+    parallel shard-file writes) vs gathering the full array to host.  The
+    sharded path must not be slower — it moves the same bytes but skips
+    the global host buffer and writes chunks in parallel.  Runs in a
+    subprocess (device count locks at jax init)."""
+    env = dict(os.environ,
+               PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    r = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT, str(repeats)],
+                       capture_output=True, text=True, timeout=900, env=env)
+    lines = [ln for ln in r.stdout.splitlines() if ln.startswith("RESULT ")]
+    assert r.returncode == 0 and lines, (
+        f"sharded-store bench subprocess failed (rc={r.returncode}):\n"
+        f"{r.stdout[-2000:]}\n{r.stderr[-3000:]}")
+    got = json.loads(lines[0][len("RESULT "):])
+    return {
+        "sharded_store_s": got["sharded_store_s"],
+        "gathered_store_s": got["gathered_store_s"],
+        "sharded_store_speedup":
+            got["gathered_store_s"] / max(got["sharded_store_s"], 1e-9),
+    }
+
+
 def run(repeats: int = 3) -> Dict[str, float]:
     natives = {"fti": heat2d_fti, "scr": heat2d_scr, "veloc": heat2d_veloc}
     out: Dict[str, float] = {}
@@ -97,6 +172,7 @@ def run(repeats: int = 3) -> Dict[str, float]:
         out[f"openchk_{backend}_s"] = t_openchk
         out[f"overhead_ratio_{backend}"] = t_openchk / t_native
     out.update(compressed_store(repeats=repeats))
+    out.update(sharded_store(repeats=repeats))
     return out
 
 

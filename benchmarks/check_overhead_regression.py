@@ -16,6 +16,14 @@ Also gates the compressed-store datapoint (``Protect(compress="int8")``):
   time (the quantize + roundtrip-verify cost against a 4x smaller
   write).  Noise-gated like the overhead ratios, with its own floor.
 
+And the sharded-store datapoint (forced-16-device mesh, 64 MiB leaf):
+``sharded_store_s`` (shard-local Plan snapshot + parallel shard-file
+writes) must not exceed ``gathered_store_s`` (full-tree gather) — the
+no-gather path moves the same bytes while skipping the global host
+buffer, so measuring slower than the gather means the store path
+regressed (it currently runs ~2x faster; the gate allows the margin to
+shrink to parity before failing).
+
 Update BENCH_overhead.json in the same PR when the pipeline legitimately
 changes.
 
@@ -41,8 +49,10 @@ COMPRESS_RATIO_CEILING = 0.30
 # the ratio's denominator (a fast uncompressed store) is noisy, so below
 # this wall-time ratio the datapoint never fails — the gate exists to
 # catch pathological regressions (accidental double-verify, device
-# round-trips in Pack), not scheduler noise
-COMPRESS_OVERHEAD_FLOOR = 4.0
+# round-trips in Pack), not scheduler noise.  Tightened from 4.0 after
+# the vectorized quantize pass + f32 roundtrip-error landed (measured
+# ~1.5; 2.5 leaves scheduler headroom without readmitting the old cost)
+COMPRESS_OVERHEAD_FLOOR = 2.5
 
 
 def main(argv=None) -> int:
@@ -89,6 +99,13 @@ def main(argv=None) -> int:
             and ovh > ref * args.threshold):
         failures.append(f"compress_store_overhead_int8: {ovh:.3f} vs "
                         f"baseline {ref:.3f} (> {args.threshold:.2f}x)")
+
+    # sharded-store datapoint: the shard-local path must not lose to the
+    # gathered path (it currently wins ~2x — parity is the hard floor)
+    sh, ga = res.get("sharded_store_s"), res.get("gathered_store_s")
+    if sh is not None and ga is not None and sh > ga:
+        failures.append(f"sharded_store_s: {sh:.3f} > gathered_store_s "
+                        f"{ga:.3f} (shard-local store path regressed)")
     if failures:
         print("store-path regression:\n" + "\n".join(failures),
               file=sys.stderr)

@@ -146,9 +146,14 @@ class Backend(abc.ABC):
         datasets are decoded and roundtrip-verified by the Pack tiers'
         read side).  ``req`` carries the load-side clause specs; backends
         that restore whole containers don't need it, but it rides the
-        uniform protocol so subclasses can consume it."""
+        uniform protocol so subclasses can consume it.
+
+        Sharded leaves come back as lazy ``ShardedLeafRef`` handles — TCL
+        assembles exactly the regions the restart template's shardings
+        need (native-API callers use ``engine.load_latest()``, which
+        materializes)."""
         self.tcl_wait()
-        got = self.engine.load_latest()
+        got = self.engine.load_latest(lazy_sharded=True)
         if got is None:
             return None
         self.stats["loads"] += 1

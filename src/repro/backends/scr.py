@@ -17,10 +17,11 @@ import numpy as np
 from repro.backends.base import Backend
 from repro.core import manifest as mf
 from repro.core.comm import Communicator
-from repro.core.formats import CHK5Reader, CHK5Writer
+from repro.core.formats import CHK5Writer
 from repro.core.protect import to_host
+from repro.core.resharding import split_sharded, write_shard_files
 from repro.core.storage import CHK_FULL, StorageConfig, StoreReport
-from repro.core.tiers import pack_named, unpack_named
+from repro.core.tiers import pack_named
 
 
 class SCRBackend(Backend):
@@ -70,7 +71,9 @@ class SCRBackend(Backend):
         root, cid = self._restart_src
         return os.path.join(mf.ckpt_dir(root, cid), f"rank{self.comm.rank}.chk5")
 
-    def complete_checkpoint(self, valid: bool) -> Optional[StoreReport]:
+    def complete_checkpoint(self, valid: bool,
+                            extra_files: Optional[list] = None
+                            ) -> Optional[StoreReport]:
         assert self._phase == "ckpt"
         self._phase = None
         ckpt_id, level = self._cur_id, self._cur_level
@@ -85,7 +88,8 @@ class SCRBackend(Backend):
                      if os.path.isfile(p))
         payload = next(iter(self._routed.values()), os.path.join(
             d, f"rank{self.comm.rank}.chk5"))
-        rep = self.pipeline.finish_external(plan, payload, nbytes)
+        rep = self.pipeline.finish_external(plan, payload, nbytes,
+                                            extra_files=extra_files)
         self.stats["stores"] += 1
         self.stats["bytes"] += nbytes
         return rep
@@ -123,28 +127,41 @@ class SCRBackend(Backend):
             self.stats["diff_fallbacks"] += 1      # SCR: kinds unsupported
         self.start_checkpoint(req.ckpt_id, min(req.level, self.max_level))
         path = self.route_file("openchk.chk5")
+        # sharded leaves snapshot shard-locally here too — the shard files
+        # land next to the routed container (same .tmp staging dir), so
+        # file-mode stores keep the atomic multi-file commit
+        gather, sharded = split_sharded(req.named,
+                                        enabled=self.cfg.sharded_store)
         named_host = {k: np.asarray(v)
-                      for k, v in to_host(req.named).items()}
+                      for k, v in to_host(gather).items()}
+        shard_files: list = []
         with CHK5Writer(path) as w:
-            w.set_attrs("", {"kind": CHK_FULL, "id": req.ckpt_id})
+            attrs = {"kind": CHK_FULL, "id": req.ckpt_id}
+            if sharded:
+                attrs["sharded"] = True
+            w.set_attrs("", attrs)
+            if sharded:
+                shard_files = write_shard_files(
+                    os.path.dirname(path), f"rank{self.comm.rank}", w,
+                    sharded, req.specs, default_kind=CHK_FULL,
+                    max_writers=self.cfg.shard_writers)
             pack_named(w, named_host, req.specs,
                        self.pipeline.pack_tiers)
-        return self.complete_checkpoint(valid=True)
+        return self.complete_checkpoint(valid=True, extra_files=shard_files)
 
     def tcl_load(self, req=None):
         cid = self.start_restart()
         if cid is None:
             return None
         self.route_file("openchk.chk5")
-        blob = self.engine.rank_payload(self._restart_src[0], cid,
-                                        self.comm.rank)
-        if blob is None:
+        # read through the shared recovery ladder: codec datasets decode
+        # roundtrip-verified, sharded leaves come back as lazy refs for
+        # TCL's mesh-aware assembly (the native route-file restart path
+        # is unchanged)
+        got = self.engine.load_latest(lazy_sharded=True)
+        if got is None:
             self.complete_restart(False)
             return None
-        import io
-        rd = CHK5Reader(io.BytesIO(blob))
-        named = unpack_named(rd)
-        rd.close()
         self.complete_restart(True)
-        return named
+        return got[0]
     # tcl_wait / tcl_finalize: inherited no-op fence (no CP thread)

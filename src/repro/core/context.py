@@ -64,6 +64,8 @@ class CheckpointConfig:
     rs_parity: int = 2
     promote_threshold: float = 0.95
     dedicated_thread: bool = True              # CP-dedicated threads (§4.2.2)
+    sharded_snapshot: bool = True              # shard-local Plan snapshots
+    shard_writers: int = 4                     # parallel shard-file writers
 
     def storage(self) -> StorageConfig:
         return StorageConfig(
@@ -74,6 +76,8 @@ class CheckpointConfig:
             erasure_scheme=self.erasure_scheme,
             rs_parity=self.rs_parity,
             promote_threshold=self.promote_threshold,
+            sharded_store=self.sharded_snapshot,
+            shard_writers=self.shard_writers,
         )
 
 

@@ -10,6 +10,15 @@ implement the format from scratch with the same semantics:
 - **attributes** on groups and datasets (JSON-serializable)
 - a msgpack **index** at the tail, so a file is readable without scanning
 
+Sharded stores spread one rank payload over a *set* of containers
+(core/resharding.py): the main ``rank<r>.chk5`` holds a ``shardidx/<name>``
+dataset per sharded leaf (chunk offsets/shapes as data; global shape,
+dtype and chunk file/dataset names as attributes) while the shard payloads
+live as ``shard/<name>/shard-<k>`` datasets in sibling
+``rank<r>.shard<j>.chk5`` files, written in parallel.  Restores read only
+the byte ranges overlapping the regions a target device needs
+(``read_range``).
+
 Layout::
 
     [8B magic "CHK5\\x00\\x01\\x00\\x00"]
@@ -75,8 +84,12 @@ def resolve_precision(name: str) -> np.dtype:
 
 
 class CHK5Writer:
-    def __init__(self, path: str):
+    def __init__(self, path: str, fsync: bool = True):
+        """``fsync=False`` defers durability to the caller (multi-file
+        shard sets fsync the whole batch once all writers finished — one
+        journal settle instead of one per file)."""
         self.path = path
+        self._fsync = fsync
         self._f = open(path, "wb")
         self._f.write(MAGIC)
         self._index: Dict[str, Any] = {"groups": {}, "datasets": {}, "attrs": {}}
@@ -94,14 +107,21 @@ class CHK5Writer:
         shape = list(arr.shape)              # ascontiguousarray promotes 0-d
         arr = np.ascontiguousarray(arr)
         off = self._f.tell()
-        payload = arr.tobytes()
+        try:
+            # zero-copy write path: the array's own buffer feeds both the
+            # file write and the crc (a tobytes() copy of a large leaf is
+            # pure overhead on the Pack path)
+            payload = memoryview(arr).cast("B")
+        except (TypeError, ValueError):
+            # non-buffer dtypes (ml_dtypes bf16/fp8) fall back to a copy
+            payload = arr.tobytes()
         self._f.write(payload)
         parts = name.strip("/").split("/")
         for i in range(1, len(parts)):
             self._index["groups"].setdefault("/".join(parts[:i]), {})
         self._index["datasets"][name.strip("/")] = {
             "offset": off,
-            "nbytes": len(payload),
+            "nbytes": arr.nbytes,
             "dtype": dtype_to_str(arr.dtype),
             "shape": shape,
             "crc32": zlib.crc32(payload) & 0xFFFFFFFF,
@@ -130,7 +150,8 @@ class CHK5Writer:
         self._f.write(struct.pack("<I", zlib.crc32(idx) & 0xFFFFFFFF))
         self._f.write(TAIL)
         self._f.flush()
-        os.fsync(self._f.fileno())
+        if self._fsync:
+            os.fsync(self._f.fileno())
         self._f.close()
         self._closed = True
 

@@ -6,16 +6,24 @@ Layout (one tree per storage tier)::
       ckpt-<id>/                 (committed — atomic os.replace from .tmp)
         manifest.json            (written last inside .tmp, so a committed
                                   dir always has a complete manifest)
-        rank<k>.chk5             per-rank payload
+        rank<k>.chk5             per-rank payload (shard index for sharded
+                                  stores)
+        rank<k>.shard<j>.chk5    shard payload files of a sharded store
         rank<k>.partner<j>.chk5  partner replica of rank j held by rank k (L2)
+        rank<k>.partner<j>.shard<s>.chk5  partner replica of a shard file
         parity.group<g>.chk5     erasure parity for node-group g (L3)
       latest                     text file: id of newest committed checkpoint
 
 Commit protocol (coordinated checkpointing, §4.2.1): every rank writes its
 payload into ``ckpt-<id>.tmp``; rank 0 writes the manifest after an
 allgather of per-rank status; the .tmp → final rename is the commit point.
-A checkpoint with a quorum of rank payloads + partner copies covering the
-stragglers is still restorable (straggler mitigation — ft/straggler.py).
+Multi-file shard sets stage into the same ``.tmp`` dir and each rank's
+status lists its full file set, so the rename commits (or a crash loses)
+the set atomically — no partial shard set is ever restorable
+(``missing_files`` detects post-commit losses; the restore walk refuses
+them).  A checkpoint with a quorum of rank payloads + partner copies
+covering the stragglers is still restorable (straggler mitigation —
+ft/straggler.py).
 """
 from __future__ import annotations
 
@@ -121,6 +129,31 @@ def latest_id(root: str) -> Optional[int]:
 def read_manifest(root: str, ckpt_id: int) -> Dict[str, Any]:
     with open(os.path.join(ckpt_dir(root, ckpt_id), MANIFEST)) as f:
         return json.load(f)
+
+
+def manifest_files(meta: Dict[str, Any]) -> List[str]:
+    """Every payload file the manifest covers (per-rank containers plus
+    their shard files — the multi-file commit surface)."""
+    out: List[str] = []
+    for st in meta.get("ranks") or []:
+        if not st:
+            continue
+        files = st.get("files")
+        if files:
+            out.extend(files)
+        elif "file" in st:              # pre-shard manifests
+            out.append(st["file"])
+    return out
+
+
+def missing_files(root: str, ckpt_id: int) -> List[str]:
+    """Manifest-covered files absent from a committed checkpoint dir — a
+    non-empty result means the (multi-file) payload set is incomplete and
+    the checkpoint must not be treated as restorable."""
+    d = ckpt_dir(root, ckpt_id)
+    meta = read_manifest(root, ckpt_id)
+    return [f for f in manifest_files(meta)
+            if not os.path.exists(os.path.join(d, f))]
 
 
 def prune(root: str, keep_last: int) -> None:

@@ -53,6 +53,13 @@ from repro.core.diff import (
 )
 from repro.core.formats import CHK5Reader, CHK5Writer
 from repro.core.protect import CHK_DIFF, CHK_FULL, Protect, to_host
+from repro.core.resharding import (
+    ShardedLeafRef,
+    ShardSnapshot,
+    resolve_shard_refs,
+    split_sharded,
+    write_shard_files,
+)
 from repro.core.tiers import (
     PackTier,
     Tier,
@@ -78,6 +85,8 @@ class StorageConfig:
     promote_threshold: float = 0.95            # diff→full break-even (Fig. 7)
     ranks_per_node: int = 1
     custom_groups: Optional[dict] = None       # SCR-style group overrides
+    sharded_store: bool = True                 # shard-local Plan snapshots
+    shard_writers: int = 4                     # parallel shard-file writers
 
     @property
     def global_root(self) -> str:
@@ -153,6 +162,7 @@ class Plan:
     attrs: Dict[str, Any]                      # payload container attrs
     extra: Dict[str, Any]                      # caller meta → manifest
     named_host: Optional[Dict[str, np.ndarray]] = None   # FULL payload
+    sharded: Optional[Dict[str, ShardSnapshot]] = None   # shard-local FULL
     deltas: Optional[List[LeafDelta]] = None             # DIFF payload
     specs: Optional[Dict[str, Optional[Protect]]] = None  # clause specs
     dirty_ratio: Optional[float] = None
@@ -176,10 +186,13 @@ class _PendingDigests:
 
 @dataclass
 class Packed:
-    """A serialized payload sitting in the staging dir (output of Pack)."""
+    """A serialized payload sitting in the staging dir (output of Pack).
+    ``shard_files`` lists the sibling shard files of a sharded store —
+    the multi-file set commits atomically with the container."""
     stage_dir: str
     path: str
     nbytes: int
+    shard_files: List[str] = field(default_factory=list)
 
 
 class CheckpointPipeline:
@@ -285,9 +298,18 @@ class CheckpointPipeline:
         kind = CHK_DIFF if deltas is not None else CHK_FULL
 
         named_host = None
+        sharded = None
         pending = None
         if full_paths:
-            named_host = to_host({p: req.named[p] for p in full_paths})
+            # shard-local snapshot: sharded leaves contribute one host
+            # buffer per *owned* shard (D2H started async, completed by
+            # Pack) instead of a gathered global-size array — the no-gather
+            # store path (ROADMAP: multi-process sharded checkpointing)
+            gather, sharded = split_sharded(
+                {p: req.named[p] for p in full_paths},
+                enabled=self.cfg.sharded_store)
+            sharded = sharded or None
+            named_host = to_host(gather) if gather else {}
             # digest bookkeeping is skipped when the backend can never
             # consume it (no checkpoint kinds) and for leaves the promote
             # path just hashed; otherwise it is owed — but *deferred* to
@@ -307,7 +329,7 @@ class CheckpointPipeline:
 
         return Plan(ckpt_id=req.ckpt_id, level=level, kind=kind, tiers=tiers,
                     root=tiers[0].root, attrs=attrs, extra=extra,
-                    named_host=named_host, deltas=deltas,
+                    named_host=named_host, sharded=sharded, deltas=deltas,
                     specs=dict(specs) if specs else None,
                     dirty_ratio=dirty_ratio, promoted_full=promoted,
                     plan_seconds=time.time() - t_plan,
@@ -361,19 +383,37 @@ class CheckpointPipeline:
         """Serialize the planned payload into the staging dir: the Pack-tier
         chain encodes FULL leaves per their clauses (compression, format
         attrs, precision); DIFF deltas ship as compacted dirty blocks.  A
-        mixed-kind plan writes both sections into one container."""
+        mixed-kind plan writes both sections into one container.
+
+        Sharded leaves write their owned shards as ``shard-<k>``
+        sub-datasets spread over sibling ``rank<r>.shard<j>.chk5`` files
+        (parallel writers; D2H completes per shard, overlapped against
+        packing of already-arrived ones) and the shard index into the main
+        container — everything inside the same ``.tmp`` staging dir, so
+        the whole multi-file set commits atomically."""
         d = mf.begin(plan.root, plan.ckpt_id)
         path = os.path.join(d, f"rank{self.comm.rank}.chk5")
         attrs = dict(plan.attrs, level=plan.level, rank=self.comm.rank,
                      world=self.comm.world)
+        shard_files: List[str] = []
         with CHK5Writer(path) as w:
-            w.set_attrs("", dict(attrs, kind=plan.kind))
+            root_attrs = dict(attrs, kind=plan.kind)
+            if plan.sharded:
+                root_attrs["sharded"] = True
+            w.set_attrs("", root_attrs)
+            if plan.sharded:
+                shard_files = write_shard_files(
+                    d, f"rank{self.comm.rank}", w, plan.sharded, plan.specs,
+                    default_kind=CHK_FULL,
+                    max_writers=self.cfg.shard_writers)
             if plan.named_host:
                 pack_named(w, plan.named_host, plan.specs, self.pack_tiers)
             if plan.deltas:
                 self._serialize_deltas(w, plan.deltas, plan.specs)
-        return Packed(stage_dir=d, path=path,
-                      nbytes=os.path.getsize(path))
+        nbytes = os.path.getsize(path) + sum(
+            os.path.getsize(p) for p in shard_files)
+        return Packed(stage_dir=d, path=path, nbytes=nbytes,
+                      shard_files=shard_files)
 
     def _serialize_deltas(self, w: CHK5Writer, deltas: List[LeafDelta],
                           specs: Optional[Dict[str, Optional[Protect]]]
@@ -395,9 +435,11 @@ class CheckpointPipeline:
     # ------------------------------------------------------------------ #
 
     def place(self, plan: Plan, packed: Packed) -> None:
-        """Run the tier stack's redundancy over the packed payload."""
+        """Run the tier stack's redundancy over the packed payload (the
+        rank container plus any sibling shard files)."""
         for tier in plan.tiers:
-            tier.place(plan.ckpt_id, packed.stage_dir, packed.path)
+            tier.place(plan.ckpt_id, packed.stage_dir, packed.path,
+                       extra_files=packed.shard_files)
 
     # ------------------------------------------------------------------ #
     # stage 4: Commit
@@ -410,7 +452,12 @@ class CheckpointPipeline:
         single-process container, and commit merges idempotently.)"""
         statuses = self.comm.allgather(
             {"rank": self.comm.rank, "ok": True,
-             "file": os.path.basename(packed.path), "nbytes": packed.nbytes})
+             "file": os.path.basename(packed.path), "nbytes": packed.nbytes,
+             # the full multi-file set this rank staged — the manifest
+             # covers shard files atomically (a partial set is detectable,
+             # and the restore path refuses it)
+             "files": [os.path.basename(packed.path)]
+             + [os.path.basename(p) for p in packed.shard_files]})
         mf.write_manifest(plan.root, plan.ckpt_id, {
             "kind": plan.kind, "level": plan.level, "world": self.comm.world,
             "group_size": self.topo.group_size,
@@ -434,6 +481,8 @@ class CheckpointPipeline:
         paths: List[str] = []
         if plan.named_host is not None:
             paths += list(plan.named_host)
+        if plan.sharded is not None:
+            paths += list(plan.sharded)
         if plan.deltas is not None:
             paths += [d.path for d in plan.deltas]
         return paths or plan.extra.get("parts", [])
@@ -474,13 +523,17 @@ class CheckpointPipeline:
             self._release_digest_fence(plan)
 
     def finish_external(self, plan: Plan, payload_path: str,
-                        nbytes: int) -> StoreReport:
+                        nbytes: int,
+                        extra_files: Optional[List[str]] = None
+                        ) -> StoreReport:
         """Place + Commit for a payload staged outside Pack (the file was
-        already written into ``ckpt-<id>.tmp`` under ``plan.root``)."""
+        already written into ``ckpt-<id>.tmp`` under ``plan.root``;
+        ``extra_files`` are its sibling shard files, if any)."""
         plan.t0 = time.time()       # exclude any CP-queue wait from seconds
         packed = Packed(
             stage_dir=mf.ckpt_dir(plan.root, plan.ckpt_id, tmp=True),
-            path=payload_path, nbytes=nbytes)
+            path=payload_path, nbytes=nbytes,
+            shard_files=list(extra_files or []))
         try:
             self.place(plan, packed)
             return self.commit(plan, packed)
@@ -545,9 +598,17 @@ class CheckpointPipeline:
                 return blob, man, tier.name
         return None
 
-    def load_latest(self, rank: Optional[int] = None
+    def load_latest(self, rank: Optional[int] = None, *,
+                    lazy_sharded: bool = False
                     ) -> Optional[Tuple[Dict[str, np.ndarray], Dict[str, Any]]]:
-        """Restore newest restorable checkpoint: FULL base + diff replay."""
+        """Restore newest restorable checkpoint: FULL base + diff replay.
+
+        Sharded leaves restore from their shard files.  By default they
+        are materialized to full host arrays (drop-in for native-API
+        callers); ``lazy_sharded=True`` returns
+        :class:`~repro.core.resharding.ShardedLeafRef` handles instead, so
+        TCL's mesh-aware restore reads only the regions each target
+        device needs — the global array never exists on host."""
         rank = self.comm.rank if rank is None else rank
         by_id: Dict[int, List[str]] = {}
         for i, root in self.available_ids():
@@ -555,30 +616,35 @@ class CheckpointPipeline:
         for ckpt_id in sorted(by_id, reverse=True):
             got = self._try_restore(ckpt_id, by_id, rank)
             if got is not None:
-                return got
+                named, meta = got
+                if not lazy_sharded:
+                    named = {k: (v.materialize()
+                                 if isinstance(v, ShardedLeafRef) else v)
+                             for k, v in named.items()}
+                return named, meta
         return None
 
     def _read_payload_any_tier(self, ckpt_id: int, by_id, rank: int
-                               ) -> Optional[Tuple[bytes, Dict, str]]:
+                               ) -> Optional[Tuple[bytes, Dict, str, str]]:
         for root in by_id.get(ckpt_id, []):
             got = self.recover_payload(root, ckpt_id, rank)
             if got is not None:
-                return got
+                return got + (root,)
         return None
 
     def _try_restore(self, ckpt_id: int, by_id, rank: int):
         # walk back to the base FULL
-        chain: List[Tuple[bytes, Dict]] = []
+        chain: List[Tuple[bytes, Dict, str]] = []
         via = None
         cur = ckpt_id
         while True:
             got = self._read_payload_any_tier(cur, by_id, rank)
             if got is None:
                 return None
-            blob, man, tier_name = got
+            blob, man, tier_name, root = got
             if via is None:
                 via = tier_name             # how the newest link was produced
-            chain.append((blob, man))
+            chain.append((blob, man, root))
             if man.get("kind") == CHK_FULL:
                 break
             prev = [i for i in by_id if i < cur]
@@ -587,16 +653,31 @@ class CheckpointPipeline:
             cur = max(prev)
         chain.reverse()                     # [full, diff, diff, ...]
 
-        named: Dict[str, np.ndarray] = {}
+        named: Dict[str, Any] = {}
         flat_u32: Dict[str, np.ndarray] = {}
         meta_shape: Dict[str, Tuple[str, List[int]]] = {}
         bb = None
-        for blob, man in chain:
+        for blob, man, root in chain:
             bb = man.get("block_bytes", self.cfg.block_bytes)
+            ckid = man.get("id", ckpt_id)
             rd = CHK5Reader(io.BytesIO(blob))
             # one pass handles FULL, DIFF *and* mixed containers: a full
-            # dataset supersedes any older delta replay of the same leaf,
-            # a delta replays onto whatever base the chain built so far
+            # (or sharded) dataset supersedes any older delta replay of the
+            # same leaf, a delta replays onto whatever base the chain built
+            # so far.  Sharded leaves resolve their chunk files first: an
+            # incomplete shard set (crash-lost / pruned file) makes this
+            # checkpoint non-restorable and the walk falls back.
+            refs = {}
+            if any(ds.startswith("shardidx/") for ds in rd.datasets()):
+                refs = resolve_shard_refs(
+                    rd, self.ctx.recovery_dirs(root, ckid), rank)
+                if refs is None:
+                    rd.close()
+                    return None
+            for name, ref in refs.items():
+                named[name] = ref
+                flat_u32.pop(name, None)
+                meta_shape.pop(name, None)
             for ds in rd.datasets():
                 if ds.startswith("data/"):
                     name = ds[len("data/"):]
@@ -611,7 +692,13 @@ class CheckpointPipeline:
                     if name not in flat_u32:
                         if name not in named:
                             return None     # chain broken
-                        flat_u32[name] = leaf_to_u32_flat(named[name], bb)
+                        base = named[name]
+                        if isinstance(base, ShardedLeafRef):
+                            # delta replay needs the flat base — the one
+                            # path that still materializes a sharded leaf
+                            base = base.materialize()
+                            named[name] = base
+                        flat_u32[name] = leaf_to_u32_flat(base, bb)
                     flat_u32[name] = apply_delta(flat_u32[name], idx, blocks, bb)
                     meta_shape[name] = (info["dtype"], info["shape"])
             rd.close()

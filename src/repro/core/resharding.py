@@ -1,28 +1,60 @@
-"""Elastic restore: rebuild state saved under one world/mesh layout onto
-another (node-count changes after failures, pod rescale, DP-width change).
+"""Elastic restore + shard-local snapshots: store state saved under one
+world/mesh layout, restore it onto another (node-count changes after
+failures, pod rescale, DP/TP-width change) — without ever materializing a
+global array on host.
 
-Two restore paths live here:
+Write side (the pipeline's Plan/Pack stages call in here):
 
-- **mesh-level** (``reshard_tree`` / ``gather_tree``): single-process
-  multi-device. Checkpoints gather sharded leaves to host at Plan; restore
-  places them onto the restart template's shardings (``tcl.load`` honors
-  the template leaf's ``.sharding``) — store on a 4×4 mesh, restart on
-  2×8 or 16×1, bit-exact (tests/test_mesh_restart.py).
-- **rank-file-level** (``ElasticLoader`` et al., below): multi-process.
+- :func:`snapshot_shards` snapshots **only the addressable shards** of a
+  sharded ``jax.Array`` — one host buffer per *distinct* shard index
+  (replicated duplicates are skipped via shard-index ownership), with the
+  D2H copies started asynchronously so Pack overlaps packing of
+  already-arrived shards against the remaining transfers.  No host buffer
+  of the global leaf size is ever allocated.
+- :func:`write_shard_files` writes the owned shards as ``shard-<k>``
+  sub-datasets spread over ``rank<r>.shard<j>.chk5`` files (one writer
+  thread per file, in parallel) and records the index — global shape,
+  chunk offsets, chunk file/dataset names — as a ``shardidx/<name>``
+  dataset in the rank's main container.
 
-Shards are recorded per rank with explicit index metadata (axis-0 chunking —
-the DP/ZeRO layout), so a loader for world W2 assembles its slice from any
-number of W1 chunk files, reading only overlapping byte ranges via CHK5
-partial reads.
+Read side:
+
+- :class:`ShardedLeafRef` is the lazy handle the restore path hands out
+  for a sharded leaf: index metadata + resolved chunk files.  It reads
+  arbitrary index boxes by touching only the overlapping byte ranges of
+  each chunk file (CHK5 partial reads), so a target device pulls exactly
+  its slice.
+- :func:`assemble_onto` builds a sharded ``jax.Array`` for a target
+  ``Sharding`` directly from per-device region reads
+  (``jax.make_array_from_single_device_arrays``) — store on 4×4, restore
+  on 2×8 or 16×1, no global host array in between.
+- :class:`ElasticLoader` assembles arbitrary regions of the global arrays
+  from any number of chunk files.  It reads both the new multi-dim
+  ``shard/<name>/shard-<k>`` chunk layout and the legacy axis-0
+  ``shard/<name>`` layout (``save_sharded`` — the DP/ZeRO rank-file path).
+
+Mesh-level helpers (``reshard_tree`` / ``gather_tree``) build restart
+templates and bit-exact global views for tests.
 """
 from __future__ import annotations
 
+import glob
 import os
-from typing import Any, Dict, List, Optional, Tuple
+import re
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.formats import CHK5Reader, CHK5Writer, str_to_dtype
+from repro.core.formats import (
+    CHK5CorruptionError,
+    CHK5Reader,
+    CHK5Writer,
+    dtype_to_str,
+    resolve_precision,
+    str_to_dtype,
+)
 
 
 def reshard_tree(tree: Any, shardings: Any) -> Any:
@@ -41,6 +73,477 @@ def gather_tree(tree: Any) -> Any:
     return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
 
+# -------------------------------------------------------------------------- #
+# shard-local snapshots (write side of the no-gather store path)
+# -------------------------------------------------------------------------- #
+
+
+def _normalize_index(index, shape: Sequence[int]) -> Tuple[Tuple[int, int], ...]:
+    """A jax shard index (tuple of slices, possibly ``slice(None)``) →
+    canonical ((start, stop), ...) per dim."""
+    out = []
+    for dim, sl in zip(shape, index):
+        start = 0 if sl.start is None else int(sl.start)
+        stop = int(dim) if sl.stop is None else int(sl.stop)
+        out.append((start, stop))
+    return tuple(out)
+
+
+@dataclass
+class ShardChunk:
+    """One owned shard of one leaf: its global placement plus the data —
+    a single-device ``jax.Array`` until :meth:`materialize` completes the
+    (already started) D2H copy, an ``np.ndarray`` afterwards."""
+    offset: Tuple[int, ...]
+    shape: Tuple[int, ...]
+    data: Any
+
+    def materialize(self) -> np.ndarray:
+        if not isinstance(self.data, np.ndarray):
+            self.data = np.asarray(self.data)
+        return self.data
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape)) * np.dtype(self.data.dtype).itemsize
+
+
+@dataclass
+class ShardSnapshot:
+    """The Plan-stage snapshot of one sharded leaf: global metadata plus
+    the distinct owned chunks (replicated duplicates already dropped)."""
+    dtype: str
+    global_shape: Tuple[int, ...]
+    chunks: List[ShardChunk]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(c.nbytes for c in self.chunks)
+
+
+def shardable(leaf: Any) -> bool:
+    """Should Plan snapshot this leaf shard-locally?  True for jax arrays
+    that live on more than one device and are not fully replicated (a
+    fully-replicated leaf has one distinct shard == the global array, so
+    the plain host snapshot is already shard-local).
+
+    Requires ``is_fully_addressable`` for now: on a multi-*process* mesh
+    each rank's shard index would cover only its local chunks, and the
+    restore walk reads a single rank container per rank — honoring
+    cross-process leaves needs the cross-rank index merge a
+    jax.distributed-backed Communicator will bring (ROADMAP)."""
+    sharding = getattr(leaf, "sharding", None)
+    if sharding is None or not hasattr(leaf, "addressable_shards"):
+        return False
+    try:
+        if getattr(sharding, "is_fully_replicated", True):
+            return False
+        if not getattr(leaf, "is_fully_addressable", False):
+            return False
+    except Exception:
+        return False
+    return len(getattr(sharding, "device_set", ())) > 1
+
+
+def snapshot_shards(leaf: Any) -> ShardSnapshot:
+    """Snapshot the distinct addressable shards of ``leaf``.
+
+    Shard-index ownership: a partially-replicated leaf presents the same
+    index on several devices — only the first device holding each distinct
+    index contributes a chunk.  Every kept shard's D2H copy is started
+    asynchronously (``copy_to_host_async``); Pack materializes chunks as
+    it writes them, so transfers overlap packing.  The chunks keep
+    references to the (immutable) device shards until then — a caller
+    that *donates* the leaf's buffer before the async tail ran will fail
+    the store loudly, never corrupt it."""
+    seen = set()
+    chunks: List[ShardChunk] = []
+    shape = tuple(int(d) for d in leaf.shape)
+    for s in leaf.addressable_shards:
+        bounds = _normalize_index(s.index, shape)
+        if bounds in seen:
+            continue                    # replicated duplicate — not owned
+        seen.add(bounds)
+        data = s.data
+        try:
+            data.copy_to_host_async()
+        except AttributeError:
+            pass
+        chunks.append(ShardChunk(
+            offset=tuple(b[0] for b in bounds),
+            shape=tuple(b[1] - b[0] for b in bounds),
+            data=data))
+    return ShardSnapshot(dtype=dtype_to_str(leaf.dtype),
+                         global_shape=shape, chunks=chunks)
+
+
+def split_sharded(named: Dict[str, Any], enabled: bool = True
+                  ) -> Tuple[Dict[str, Any], Dict[str, ShardSnapshot]]:
+    """Partition protected leaves into (gather-snapshot leaves,
+    shard-local snapshots) — the Plan-stage split."""
+    if not enabled:
+        return dict(named), {}
+    sharded = {p: snapshot_shards(v) for p, v in named.items()
+               if shardable(v)}
+    host = {p: v for p, v in named.items() if p not in sharded}
+    return host, sharded
+
+
+# -------------------------------------------------------------------------- #
+# sharded CHK5 layout (Pack side)
+# -------------------------------------------------------------------------- #
+
+_SHARD_FILE_RE = re.compile(r"^rank(\d+)\.shard(\d+)\.chk5$")
+
+
+def shard_file_name(prefix: str, j: int) -> str:
+    return f"{prefix}.shard{j}.chk5"
+
+
+def _chunk_dataset(name: str, k: int) -> str:
+    return f"shard/{name}/shard-{k}"
+
+
+def _precision_dtype(spec, arr_dtype) -> Optional[np.dtype]:
+    """The store-side dtype a ``precision`` clause asks for, or None when
+    it does not apply (no clause / non-float leaf)."""
+    if spec is None or spec.precision is None:
+        return None
+    if not np.issubdtype(np.dtype(arr_dtype), np.floating):
+        return None
+    return resolve_precision(spec.precision)
+
+
+def write_shard_files(stage_dir: str, prefix: str, index_writer: CHK5Writer,
+                      sharded: Dict[str, ShardSnapshot],
+                      specs: Optional[Dict[str, Any]] = None,
+                      default_kind: str = "FULL",
+                      max_writers: int = 4) -> List[str]:
+    """Write every owned chunk as a ``shard-<k>`` sub-dataset spread over
+    ``<prefix>.shard<j>.chk5`` files in ``stage_dir`` — one writer thread
+    per file, running in parallel — and record each leaf's shard index in
+    ``index_writer`` (the rank's main container) as a ``shardidx/<name>``
+    dataset:
+
+    - the dataset itself is an int64 ``(n_chunks, 2·ndim)`` table of
+      ``offset ‖ shape`` rows;
+    - attributes carry ``global_shape``, the original ``dtype``,
+      ``n_chunks`` and the per-chunk ``files``/``datasets`` names, plus
+      the governing clause attrs.
+
+    Chunks materialize (completing their async D2H copy) immediately
+    before their dataset write, so device→host transfers overlap packing
+    of already-arrived shards.  Returns the shard file paths; all files
+    land in the staging dir, so the multi-file set commits (or vanishes)
+    atomically with the container.
+    """
+    from repro.core.tiers import clause_attrs
+    specs = specs or {}
+    work: List[Tuple[str, int, ShardChunk, Optional[np.dtype], Any]] = []
+    for name in sorted(sharded):
+        snap = sharded[name]
+        spec = specs.get(name)
+        cast = _precision_dtype(spec, str_to_dtype(snap.dtype))
+        for k, chunk in enumerate(snap.chunks):
+            work.append((name, k, chunk, cast, spec))
+
+    n_files = max(1, min(int(max_writers), len(work)))
+    paths = [os.path.join(stage_dir, shard_file_name(prefix, j))
+             for j in range(n_files)]
+    assignment: Dict[Tuple[str, int], int] = {
+        (name, k): i % n_files for i, (name, k, *_rest) in enumerate(work)}
+
+    def write_one(j: int) -> None:
+        # durability is batched below: all shard files fsync back-to-back
+        # after every writer finished (one journal settle, not one per
+        # file — per-file fsync made a 4-file set pay ~4 journal commits)
+        with CHK5Writer(paths[j], fsync=False) as w:
+            w.set_attrs("", {"shard_file": True,
+                             "of": f"{prefix}.chk5"})
+            for i, (name, k, chunk, cast, _spec) in enumerate(work):
+                if i % n_files != j:
+                    continue
+                arr = chunk.materialize()
+                if cast is not None and arr.dtype != cast:
+                    arr = arr.astype(cast)
+                w.write_dataset(_chunk_dataset(name, k), arr, {
+                    "offset": [int(x) for x in chunk.offset],
+                    "global_shape": [int(x) for x in
+                                     sharded[name].global_shape],
+                    "dtype": sharded[name].dtype,
+                })
+
+    # file count (the on-disk layout) is deterministic; only the thread
+    # count adapts to the machine — more writer threads than cores just
+    # adds GIL/scheduler churn, so a small box writes the same files with
+    # fewer threads
+    n_workers = max(1, min(n_files, os.cpu_count() or 1))
+    if n_workers == 1:
+        for j in range(n_files):
+            write_one(j)
+    else:
+        with ThreadPoolExecutor(max_workers=n_workers) as ex:
+            for f in [ex.submit(write_one, j) for j in range(n_files)]:
+                f.result()              # propagate the first writer failure
+    for p in paths:                     # batched durability (see write_one)
+        fd = os.open(p, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
+    for name in sorted(sharded):
+        snap = sharded[name]
+        spec = specs.get(name)
+        ndim = len(snap.global_shape)
+        table = np.zeros((len(snap.chunks), 2 * max(ndim, 1)), np.int64)
+        for k, chunk in enumerate(snap.chunks):
+            table[k, :ndim] = chunk.offset
+            table[k, ndim:2 * ndim] = chunk.shape
+        attrs = dict(clause_attrs(spec, default_kind),
+                     global_shape=[int(x) for x in snap.global_shape],
+                     dtype=snap.dtype,
+                     n_chunks=len(snap.chunks),
+                     files=[os.path.basename(
+                         paths[assignment[(name, k)]])
+                         for k in range(len(snap.chunks))],
+                     datasets=[_chunk_dataset(name, k)
+                               for k in range(len(snap.chunks))])
+        if spec is not None and getattr(spec, "compress", None):
+            # codecs apply to gathered leaves; record why the clause was
+            # not honored rather than silently dropping it
+            attrs["codec_fallback"] = (
+                f"{spec.compress}: sharded leaf (chunks ship raw)")
+        if spec is not None and spec.precision is not None and \
+                _precision_dtype(spec, str_to_dtype(snap.dtype)) is None:
+            attrs.pop("precision", None)
+            attrs["precision_fallback"] = (
+                f"{spec.precision}: non-float leaf ({snap.dtype})")
+        index_writer.write_dataset(f"shardidx/{name}", table, attrs)
+    return paths
+
+
+# -------------------------------------------------------------------------- #
+# lazy sharded-leaf restore (read side)
+# -------------------------------------------------------------------------- #
+
+
+@dataclass
+class _ChunkRef:
+    path: str
+    dataset: str
+    offset: Tuple[int, ...]
+    shape: Tuple[int, ...]
+
+
+def _clip_box(box, offset, shape):
+    """Intersect a chunk (offset/shape) with a requested box → (selector
+    into the output, selector into the chunk), or None when disjoint."""
+    sel_out: List[slice] = []
+    sel_chunk: List[slice] = []
+    for (lo, hi), off, dim in zip(box, offset, shape):
+        t_lo, t_hi = max(lo, off), min(hi, off + dim)
+        if t_lo >= t_hi:
+            return None
+        sel_out.append(slice(t_lo - lo, t_hi - lo))
+        sel_chunk.append(slice(t_lo - off, t_hi - off))
+    return tuple(sel_out), tuple(sel_chunk)
+
+
+def _assemble_box(box, dtype, chunks, read_slab, label: str,
+                  exc_cls=ValueError) -> np.ndarray:
+    """Assemble global box ``box`` from overlapping chunk reads — the one
+    implementation behind ``ShardedLeafRef.read_index`` and
+    ``ElasticLoader.read_region``.
+
+    ``chunks`` yields ``(offset, shape, handle)``; ``read_slab(handle,
+    r_lo, r_hi)`` returns the chunk's leading-dim rows [r_lo, r_hi) as a
+    flat array (shards are C-order, so a dim-0 range is one contiguous
+    byte range).  Chunks may *overlap* (replicated shards appearing in
+    several merged rank files — each copy holds the same values); a fill
+    mask verifies complete coverage, so overlaps neither double-count nor
+    mask a hole."""
+    out_shape = tuple(hi - lo for lo, hi in box)
+    out = np.empty(out_shape, dtype)
+    filled = np.zeros(out_shape, np.bool_)
+    for offset, shape, handle in chunks:
+        hit = _clip_box(box, offset, shape)
+        if hit is None:
+            continue
+        sel_out, sel_chunk = hit
+        r_lo = sel_chunk[0].start if sel_chunk else 0
+        r_hi = sel_chunk[0].stop if sel_chunk else 1
+        slab = read_slab(handle, r_lo, r_hi)
+        slab = slab.reshape((r_hi - r_lo,) + tuple(shape[1:]))
+        piece = slab[(slice(None),) + sel_chunk[1:]]
+        if piece.dtype != dtype:
+            piece = piece.astype(dtype)       # precision cast-back
+        out[sel_out] = piece
+        filled[sel_out] = True
+    if not filled.all():
+        missing = int(filled.size - np.count_nonzero(filled))
+        raise exc_cls(
+            f"{label}: box {box} not fully covered "
+            f"({missing} of {filled.size} elements missing)")
+    return out
+
+
+class ShardedLeafRef:
+    """Lazy handle to one sharded leaf of a committed checkpoint: the
+    shard index plus resolved chunk files.  ``read_index`` assembles any
+    index box touching only the overlapping leading-dim slabs of each
+    chunk file; ``materialize`` assembles the full global array (host
+    restores / delta replay)."""
+
+    def __init__(self, name: str, dtype: str, shape: Sequence[int],
+                 chunks: List[_ChunkRef],
+                 precision: Optional[str] = None):
+        self.name = name
+        self.dtype = str_to_dtype(dtype)          # restore target dtype
+        self.shape = tuple(int(x) for x in shape)
+        self.chunks = chunks
+        self.precision = precision                # stored-cast marker
+
+    def __repr__(self) -> str:
+        return (f"ShardedLeafRef({self.name!r}, shape={self.shape}, "
+                f"dtype={self.dtype.str}, chunks={len(self.chunks)})")
+
+    # -- reading ------------------------------------------------------- #
+
+    def _box(self, index) -> Tuple[Tuple[int, int], ...]:
+        if index is None:
+            return tuple((0, d) for d in self.shape)
+        return _normalize_index(index, self.shape)
+
+    def read_index(self, index=None,
+                   _readers: Optional[Dict[str, CHK5Reader]] = None
+                   ) -> np.ndarray:
+        """Assemble global box ``index`` (tuple of slices; None → all)
+        from the overlapping chunks, reading only overlapping slabs."""
+        readers = {} if _readers is None else _readers
+
+        def read_slab(c: _ChunkRef, r_lo: int, r_hi: int) -> np.ndarray:
+            rd = readers.get(c.path)
+            if rd is None:
+                rd = readers[c.path] = CHK5Reader(c.path)
+            row_elems = int(np.prod(c.shape[1:])) if len(c.shape) > 1 else 1
+            return rd.read_range(c.dataset, r_lo * row_elems,
+                                 (r_hi - r_lo) * row_elems)
+
+        try:
+            return _assemble_box(
+                self._box(index), self.dtype,
+                ((c.offset, c.shape, c) for c in self.chunks),
+                read_slab, self.name, exc_cls=CHK5CorruptionError)
+        finally:
+            if _readers is None:
+                for rd in readers.values():
+                    rd.close()
+
+    def materialize(self) -> np.ndarray:
+        """The full global array on host (needed for single-device
+        restores and DIFF delta replay — the sharded fast path never
+        calls this)."""
+        return self.read_index(None)
+
+
+def resolve_shard_refs(rd, dirs: Sequence[str], rank: int
+                       ) -> Optional[Dict[str, ShardedLeafRef]]:
+    """Resolve every ``shardidx/<name>`` dataset of a rank container into
+    a :class:`ShardedLeafRef`, locating each chunk file across the
+    candidate checkpoint dirs (the file itself, or a partner replica
+    ``rank<h>.partner<rank>.shard<j>.chk5``).  Returns None when any
+    chunk file is missing or fails CHK5 validation — an incomplete shard
+    set makes the whole checkpoint non-restorable (the caller falls back
+    to an older id or another tier)."""
+    idx_datasets = [ds for ds in rd.datasets() if ds.startswith("shardidx/")]
+    if not idx_datasets:
+        return {}
+    out: Dict[str, ShardedLeafRef] = {}
+    resolved: Dict[str, Optional[str]] = {}
+    valid: Dict[str, bool] = {}
+
+    def find(basename: str) -> Optional[str]:
+        if basename in resolved:
+            return resolved[basename]
+        path = None
+        m = _SHARD_FILE_RE.match(basename)
+        for d in dirs:
+            p = os.path.join(d, basename)
+            if os.path.exists(p):
+                path = p
+                break
+            if m is not None:
+                hits = glob.glob(os.path.join(
+                    d, f"rank*.partner{m.group(1)}.shard{m.group(2)}.chk5"))
+                if hits:
+                    path = sorted(hits)[0]
+                    break
+        resolved[basename] = path
+        return path
+
+    def ok(path: str) -> bool:
+        if path not in valid:
+            try:
+                CHK5Reader(path).close()
+                valid[path] = True
+            except (OSError, CHK5CorruptionError):
+                valid[path] = False
+        return valid[path]
+
+    for ds in idx_datasets:
+        name = ds[len("shardidx/"):]
+        meta = rd.info(ds)["attrs"]
+        table = rd.read_dataset(ds)
+        gshape = [int(x) for x in meta["global_shape"]]
+        ndim = len(gshape)
+        chunks: List[_ChunkRef] = []
+        for k in range(int(meta["n_chunks"])):
+            path = find(meta["files"][k])
+            if path is None or not ok(path):
+                return None
+            row = table[k]
+            chunks.append(_ChunkRef(
+                path=path, dataset=meta["datasets"][k],
+                offset=tuple(int(x) for x in row[:ndim]),
+                shape=tuple(int(x) for x in row[ndim:2 * ndim])))
+        out[name] = ShardedLeafRef(
+            name, meta["dtype"], gshape, chunks,
+            precision=meta.get("precision"))
+    return out
+
+
+def assemble_onto(ref: ShardedLeafRef, sharding) -> Any:
+    """Build a jax array laid out per ``sharding`` directly from the shard
+    files: one region read per *distinct* target index (replicated target
+    devices share the host buffer), then
+    ``jax.make_array_from_single_device_arrays`` — the global array never
+    exists on host."""
+    import jax
+    shape = tuple(ref.shape)
+    imap = sharding.addressable_devices_indices_map(shape)
+    readers: Dict[str, CHK5Reader] = {}
+    cache: Dict[Tuple, np.ndarray] = {}
+    pieces = []
+    try:
+        for dev, idx in imap.items():
+            key = _normalize_index(idx if idx is not None else
+                                   (slice(None),) * len(shape), shape)
+            host = cache.get(key)
+            if host is None:
+                host = cache[key] = ref.read_index(idx, _readers=readers)
+            pieces.append(jax.device_put(host, dev))
+    finally:
+        for rd in readers.values():
+            rd.close()
+    return jax.make_array_from_single_device_arrays(shape, sharding, pieces)
+
+
+# -------------------------------------------------------------------------- #
+# rank-file elastic restore (multi-process DP/ZeRO layout)
+# -------------------------------------------------------------------------- #
+
+
 def shard_bounds(n_rows: int, world: int, rank: int) -> Tuple[int, int]:
     """Even axis-0 partition with remainder spread over the first ranks."""
     base, rem = divmod(n_rows, world)
@@ -52,7 +555,9 @@ def shard_bounds(n_rows: int, world: int, rank: int) -> Tuple[int, int]:
 def save_sharded(path: str, named_global_slices: Dict[str, np.ndarray],
                  offsets: Dict[str, int], global_shapes: Dict[str, List[int]],
                  meta: Optional[Dict[str, Any]] = None) -> None:
-    """Write this rank's chunks (+ index metadata) into one CHK5 file."""
+    """Write this rank's axis-0 chunks (+ index metadata) into one CHK5
+    file (the legacy per-rank layout; the pipeline's store path now emits
+    the multi-dim ``shard-<k>`` layout via :func:`write_shard_files`)."""
     with CHK5Writer(path) as w:
         w.set_attrs("", dict(meta or {}, sharded=True))
         for name, arr in named_global_slices.items():
@@ -63,24 +568,40 @@ def save_sharded(path: str, named_global_slices: Dict[str, np.ndarray],
 
 
 class ElasticLoader:
-    """Assemble arbitrary row ranges of the global arrays from chunk files."""
+    """Assemble arbitrary regions of the global arrays from chunk files.
+
+    Understands both shard layouts:
+
+    - ``shard/<name>/shard-<k>`` datasets with an ``offset`` attr (the
+      pipeline's multi-dim shard files), and
+    - legacy ``shard/<name>`` datasets with a ``row_offset`` attr (axis-0
+      chunking from :func:`save_sharded`).
+    """
 
     def __init__(self, files: List[str]):
         self.readers = [CHK5Reader(f) for f in files]
-        # name → [(reader, dataset, row_offset, n_rows, row_elems, dtype, gshape)]
+        self._paths = list(files)
+        # name → [(reader, dataset, offset tuple, shape tuple, dtype, gshape)]
         self.chunks: Dict[str, List[tuple]] = {}
-        for rd in self.readers:
+        for rd, path in zip(self.readers, self._paths):
             for ds in rd.datasets():
                 if not ds.startswith("shard/"):
                     continue
-                name = ds[len("shard/"):]
                 m = rd.info(ds)
                 a = m["attrs"]
-                gshape = a["global_shape"]
-                row_elems = int(np.prod(gshape[1:])) if len(gshape) > 1 else 1
+                if "offset" in a:                   # multi-dim chunk
+                    name = ds[len("shard/"):].rsplit("/", 1)[0]
+                    offset = tuple(int(x) for x in a["offset"])
+                elif "row_offset" in a:             # legacy axis-0 chunk
+                    name = ds[len("shard/"):]
+                    offset = (int(a["row_offset"]),) + \
+                        (0,) * (len(m["shape"]) - 1)
+                else:
+                    continue
+                gshape = [int(x) for x in a["global_shape"]]
                 self.chunks.setdefault(name, []).append(
-                    (rd, ds, a["row_offset"], m["shape"][0], row_elems,
-                     m["dtype"], gshape))
+                    (rd, ds, offset, tuple(m["shape"]),
+                     a.get("dtype", m["dtype"]), gshape))
         for v in self.chunks.values():
             v.sort(key=lambda c: c[2])
 
@@ -88,31 +609,37 @@ class ElasticLoader:
         return sorted(self.chunks)
 
     def global_shape(self, name: str) -> List[int]:
-        return self.chunks[name][0][6]
+        return self.chunks[name][0][5]
+
+    def dtype(self, name: str) -> np.dtype:
+        return str_to_dtype(self.chunks[name][0][4])
+
+    def read_region(self, name: str, index) -> np.ndarray:
+        """Assemble global box ``index`` (tuple of slices; None → all) of
+        ``name`` from overlapping chunks, reading only overlapping slabs.
+        Overlapping chunk files (replicated shards merged from several
+        rank files) are handled — coverage is mask-verified."""
+        gshape = self.global_shape(name)
+        box = tuple((0, int(d)) for d in gshape) if index is None else \
+            _normalize_index(index, gshape)
+
+        def read_slab(handle, r_lo: int, r_hi: int) -> np.ndarray:
+            rd, ds, shp = handle
+            row_elems = int(np.prod(shp[1:])) if len(shp) > 1 else 1
+            return rd.read_range(ds, r_lo * row_elems,
+                                 (r_hi - r_lo) * row_elems)
+
+        return _assemble_box(
+            box, self.dtype(name),
+            ((off, shp, (rd, ds, shp))
+             for rd, ds, off, shp, _dt, _gs in self.chunks[name]),
+            read_slab, name)
 
     def read_rows(self, name: str, lo: int, hi: int) -> np.ndarray:
-        """Assemble global rows [lo, hi) of ``name`` from overlapping chunks,
-        reading only the overlapping element ranges of each file."""
-        parts = []
-        cur = lo
-        for rd, ds, off, n, row_elems, dtype, gshape in self.chunks[name]:
-            c_lo, c_hi = off, off + n
-            if c_hi <= cur or c_lo >= hi:
-                continue
-            take_lo = max(cur, c_lo)
-            take_hi = min(hi, c_hi)
-            start_elem = (take_lo - c_lo) * row_elems
-            arr = rd.read_range(ds, start_elem, (take_hi - take_lo) * row_elems)
-            parts.append(arr)
-            cur = take_hi
-        if cur != hi:
-            raise ValueError(
-                f"{name}: rows [{lo},{hi}) not fully covered (got to {cur})")
-        dt = str_to_dtype(self.chunks[name][0][5])
-        flat = np.concatenate([p.view(dt) for p in parts]) if parts else \
-            np.zeros(0, dt)
+        """Assemble global rows [lo, hi) of ``name`` (axis-0 range)."""
         gshape = self.global_shape(name)
-        return flat.reshape([hi - lo] + list(gshape[1:]))
+        index = (slice(lo, hi),) + tuple(slice(0, d) for d in gshape[1:])
+        return self.read_region(name, index)
 
     def read_for_rank(self, name: str, world: int, rank: int) -> np.ndarray:
         g = self.global_shape(name)
@@ -127,7 +654,7 @@ class ElasticLoader:
 def elastic_restore(ckpt_dir_path: str, new_world: int, new_rank: int
                     ) -> Dict[str, np.ndarray]:
     """Restore this new rank's slice of every sharded array in a committed
-    checkpoint directory (any number of original rank files)."""
+    checkpoint directory (any number of original rank/shard files)."""
     files = [os.path.join(ckpt_dir_path, f) for f in os.listdir(ckpt_dir_path)
              if f.endswith(".chk5") and f.startswith("rank")
              and ".partner" not in f]

@@ -87,9 +87,10 @@ class StorageEngine:
     def available_ids(self) -> List[Tuple[int, str]]:
         return self.pipeline.available_ids()
 
-    def load_latest(self, rank: Optional[int] = None
+    def load_latest(self, rank: Optional[int] = None, *,
+                    lazy_sharded: bool = False
                     ) -> Optional[Tuple[Dict[str, np.ndarray], Dict[str, Any]]]:
-        return self.pipeline.load_latest(rank)
+        return self.pipeline.load_latest(rank, lazy_sharded=lazy_sharded)
 
     def rank_payload(self, root: str, ckpt_id: int, rank: int
                      ) -> Optional[bytes]:

@@ -33,6 +33,7 @@ from repro.core.protect import (
     resolve_specs,
     unflatten_named,
 )
+from repro.core.resharding import ShardedLeafRef, assemble_onto
 from repro.core.storage import CHK_FULL, StorageConfig, StoreReport
 
 
@@ -96,12 +97,21 @@ class TCL:
                         f"{path}: checkpoint dtype {arr.dtype} != "
                         f"template {leaf.dtype}")
                 # mesh-change restart: the template leaf's sharding is the
-                # *target* layout — a checkpoint gathered to host under one
-                # mesh lands sharded onto whatever mesh the restart
-                # template carries (core/resharding.reshard_tree builds
-                # such templates); plain arrays restore as before
-                merged[path] = jax.device_put(
-                    arr, getattr(leaf, "sharding", None))
+                # *target* layout (core/resharding.reshard_tree builds such
+                # templates).  A shard-file checkpoint restores through
+                # ElasticLoader assembly: each target device reads exactly
+                # its slice from the chunk files — store on 4×4, restore
+                # on 2×8 or 16×1 without materializing the global array on
+                # host.  Gathered checkpoints land via device_put as
+                # before; plain arrays restore unchanged.
+                sharding = getattr(leaf, "sharding", None)
+                if isinstance(arr, ShardedLeafRef):
+                    if sharding is not None:
+                        merged[path] = assemble_onto(arr, sharding)
+                    else:
+                        merged[path] = jax.device_put(arr.materialize(), None)
+                else:
+                    merged[path] = jax.device_put(arr, sharding)
             else:
                 merged[path] = leaf
         return unflatten_named(treedef, merged, req.template)

@@ -45,7 +45,7 @@ import abc
 import json
 import os
 import zlib
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -154,9 +154,12 @@ class Tier(abc.ABC):
         """Where payloads (and the manifest) for this tier land."""
         return self.ctx.local_root
 
-    def place(self, ckpt_id: int, stage_dir: str, payload_path: str) -> None:
+    def place(self, ckpt_id: int, stage_dir: str, payload_path: str,
+              extra_files: Sequence[str] = ()) -> None:
         """Write-side: apply this tier's scheme to the packed payload.
-        ``stage_dir`` is the uncommitted ``.tmp`` checkpoint dir."""
+        ``stage_dir`` is the uncommitted ``.tmp`` checkpoint dir;
+        ``extra_files`` are the payload's sibling shard files (sharded
+        stores stage a multi-file set)."""
 
     @abc.abstractmethod
     def recover(self, ckpt_id: int, rank: int, root: str,
@@ -190,9 +193,12 @@ class PartnerTier(Tier):
     name = "partner"
     level = 2
 
-    def place(self, ckpt_id, stage_dir, payload_path):
+    def place(self, ckpt_id, stage_dir, payload_path, extra_files=()):
         payload = open(payload_path, "rb").read()
-        replicate(self.ctx.comm, self.ctx.topo, ckpt_id, payload)
+        extra = {os.path.basename(p): open(p, "rb").read()
+                 for p in extra_files}
+        replicate(self.ctx.comm, self.ctx.topo, ckpt_id, payload,
+                  extra=extra or None)
         self.ctx.comm.barrier()
         store_partner_copy(self.ctx.comm, self.ctx.topo, ckpt_id, stage_dir)
 
@@ -211,7 +217,12 @@ class ErasureTier(Tier):
     name = "erasure"
     level = 3
 
-    def place(self, ckpt_id, stage_dir, payload_path):
+    def place(self, ckpt_id, stage_dir, payload_path, extra_files=()):
+        # parity covers the rank container only: shard files of a sharded
+        # L3 store are not erasure-encoded, so losing a node that held
+        # them makes that checkpoint non-restorable — the restore walk
+        # detects the incomplete shard set and falls back safely (older
+        # id / global tier) rather than reconstructing a partial payload
         ctx = self.ctx
         group = ctx.topo.erasure_group(ctx.comm.rank)
         g = ctx.topo.group_index(ctx.comm.rank)
@@ -438,9 +449,14 @@ class Int8CompressTier(PackTier):
                 arr = arr.astype(target)
         q, scale = quantize_int8_np(arr)
         back = dequantize_int8_np(q, scale, arr.shape).astype(orig.dtype)
-        a64 = orig.astype(np.float64).reshape(-1)
-        err = float(np.linalg.norm(back.astype(np.float64).reshape(-1) - a64)
-                    / max(float(np.linalg.norm(a64)), 1e-12))
+        # relative-L2 roundtrip error in f32 (the f64 casts dominated the
+        # compressed-store overhead); an overflow degrades to inf, which
+        # simply trips the max_error fallback — never a silent accept
+        d = (back.astype(np.float32, copy=False)
+             - orig.astype(np.float32, copy=False)).reshape(-1)
+        a32 = orig.astype(np.float32, copy=False).reshape(-1)
+        err = float(np.sqrt(np.dot(d, d))
+                    / max(float(np.sqrt(np.dot(a32, a32))), 1e-12))
         if spec.max_error is not None and err > spec.max_error:
             CHK5FormatTier().encode(w, name, orig, spec, dict(
                 attrs, codec_fallback=(

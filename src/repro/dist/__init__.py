@@ -15,10 +15,14 @@ Three concerns, three modules:
   checkpoint payloads.
 
 Checkpointing interaction: shardings live *outside* the checkpoint. The
-pipeline's Plan stage gathers sharded leaves to host (``to_host`` works on
-any fully-addressable jax array), and restore places leaves onto whatever
-mesh the restart template carries (``core/resharding.reshard_tree``) — so
-a checkpoint written under one mesh restores under another unchanged.
+pipeline's Plan stage snapshots sharded leaves **shard-locally** (one host
+buffer per owned shard — never a gathered global array;
+``core/resharding.snapshot_shards``), Pack spreads the shards over
+parallel ``rank<r>.shard<j>.chk5`` files, and restore assembles exactly
+the regions each device of the restart template's mesh needs
+(``core/resharding.ElasticLoader`` /
+``assemble_onto``) — so a checkpoint written under one mesh restores
+under another without the global array ever existing on host.
 """
 from repro.dist.context import (  # noqa: F401
     DATA,

@@ -22,8 +22,14 @@ _CLAUSE_ATTRS = ("codec", "kind", "precision", "codec_fallback",
                  "precision_fallback")
 
 
-def _clause_str(attrs: dict) -> str:
+def _clause_str(name: str, attrs: dict) -> str:
     parts = []
+    if name.startswith("shardidx/"):
+        # the shard index of a sharded leaf: summarize the chunk set so the
+        # listing shows where the payload actually lives
+        parts.append(f"sharded n_chunks={attrs.get('n_chunks')} "
+                     f"global={tuple(attrs.get('global_shape', ()))} "
+                     f"over {len(set(attrs.get('files', [])))} file(s)")
     for k in _CLAUSE_ATTRS:
         if k in attrs:
             parts.append(f"{k}={attrs[k]}")
@@ -70,7 +76,7 @@ def main(argv=None) -> int:
         total += m["nbytes"]
         line = (f"  {name:60s} {m['dtype']:>10s} "
                 f"{str(tuple(m['shape'])):>20s} {m['nbytes']:>12,d} B")
-        clauses = _clause_str(m.get("attrs", {}))
+        clauses = _clause_str(name, m.get("attrs", {}))
         if clauses:
             line += f"  [{clauses}]"
         if args.stats and m["dtype"] != "bytes":

@@ -7,7 +7,12 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch
-from repro.core.context import CHK_DIFF, CheckpointConfig, CheckpointContext
+from repro.core.context import (
+    CHK_DIFF,
+    CheckpointConfig,
+    CheckpointContext,
+    Protect,
+)
 from repro.data.synthetic import init_data_state
 from repro.ft.failures import FaultInjector, SimulatedFault
 from repro.models.zoo import build_model
@@ -110,13 +115,13 @@ def test_selectors_protect_subtree(tmp_path):
     ctx = CheckpointContext(CheckpointConfig(dir=str(tmp_path / "s"),
                                              backend="fti",
                                              dedicated_thread=False))
-    ctx.protect("params/**", "step")
+    ctx.protect(Protect("params/**"), Protect("step"))
     ctx.store(state, id=1, level=1)
     ctx.shutdown()
     ctx2 = CheckpointContext(CheckpointConfig(dir=str(tmp_path / "s"),
                                               backend="fti",
                                               dedicated_thread=False))
-    ctx2.protect("params/**", "step")
+    ctx2.protect(Protect("params/**"), Protect("step"))
     template = {"params": {"w": jnp.zeros(4)}, "opt": {"m": jnp.ones(4) * 9},
                 "step": jnp.int32(0)}
     got = ctx2.load(template)
