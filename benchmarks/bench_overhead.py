@@ -89,6 +89,42 @@ def compressed_store(repeats: int = 3) -> Dict[str, float]:
     }
 
 
+def objstore_store(repeats: int = 3) -> Dict[str, float]:
+    """Object-store L4 datapoint: wall time of a chunked+cataloged store
+    (``objstore_store_s``) and the dedup ratio — a second store after a
+    small param delta must upload <30% of the first's bytes (unchanged
+    content-addressed chunks upload nothing; ``objstore_dedup_ratio`` is
+    gated hard in check_overhead_regression.py).  Synchronous fti so the
+    Place uploads + Commit catalog publish are inside the timing."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core.context import CheckpointConfig, CheckpointContext
+
+    n = 1 << 23                      # 32 MiB of f32 payload → 32 chunks
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=n).astype(np.float32)
+    times, ratios = [], []
+    for r in range(repeats):
+        d = "/tmp/bo-objstore"
+        shutil.rmtree(d, ignore_errors=True)
+        ctx = CheckpointContext(CheckpointConfig(
+            dir=d, backend="fti", dedicated_thread=False))
+        tier = ctx.tcl.backend.engine.objstore_tier()
+        t0 = time.time()
+        ctx.store({"params": {"w": jnp.asarray(base)}}, id=1, level=4)
+        times.append(time.time() - t0)
+        up1 = tier.uploader.stats["bytes_uploaded"]
+        delta = base.copy()
+        delta[:4096] += 1.0          # a small param delta
+        ctx.store({"params": {"w": jnp.asarray(delta)}}, id=2, level=4)
+        ratios.append((tier.uploader.stats["bytes_uploaded"] - up1)
+                      / max(up1, 1))
+        ctx.shutdown()
+        shutil.rmtree(d, ignore_errors=True)
+    return {"objstore_store_s": min(times),
+            "objstore_dedup_ratio": min(ratios)}
+
+
 _SHARDED_SCRIPT = textwrap.dedent("""
     import os, sys, json, time, shutil
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
@@ -173,6 +209,7 @@ def run(repeats: int = 3) -> Dict[str, float]:
         out[f"overhead_ratio_{backend}"] = t_openchk / t_native
     out.update(compressed_store(repeats=repeats))
     out.update(sharded_store(repeats=repeats))
+    out.update(objstore_store(repeats=repeats))
     return out
 
 

@@ -16,6 +16,11 @@ Also gates the compressed-store datapoint (``Protect(compress="int8")``):
   time (the quantize + roundtrip-verify cost against a 4x smaller
   write).  Noise-gated like the overhead ratios, with its own floor.
 
+And the objstore datapoint (``objstore_store_s`` wall time plus
+``objstore_dedup_ratio`` — the bytes a second store after a small param
+delta uploads, relative to the first; hard-gated at 0.30 since chunk
+dedup is byte-deterministic).
+
 And the sharded-store datapoint (forced-16-device mesh, 64 MiB leaf):
 ``sharded_store_s`` (shard-local Plan snapshot + parallel shard-file
 writes) must not exceed ``gathered_store_s`` (full-tree gather) — the
@@ -45,6 +50,12 @@ ABS_FLOOR = 1.15
 # int8 payload must stay ~4x smaller; anything above this means the codec
 # stopped engaging (bytes are deterministic — no noise allowance needed)
 COMPRESS_RATIO_CEILING = 0.30
+# the second objstore store after a small param delta must upload <30%
+# of the first store's bytes — content-addressed dedup is byte-
+# deterministic (unchanged chunks hash identically), so the gate is hard:
+# above it, the chunk layer stopped deduping (layout no longer stable, or
+# the exists-check broke)
+OBJSTORE_DEDUP_CEILING = 0.30
 # compressed stores pay quantize+verify CPU against a 4x smaller write;
 # the ratio's denominator (a fast uncompressed store) is noisy, so below
 # this wall-time ratio the datapoint never fails — the gate exists to
@@ -99,6 +110,13 @@ def main(argv=None) -> int:
             and ovh > ref * args.threshold):
         failures.append(f"compress_store_overhead_int8: {ovh:.3f} vs "
                         f"baseline {ref:.3f} (> {args.threshold:.2f}x)")
+
+    # objstore datapoint: hard dedup ceiling (byte-deterministic)
+    ded = res.get("objstore_dedup_ratio")
+    if ded is not None and ded > OBJSTORE_DEDUP_CEILING:
+        failures.append(f"objstore_dedup_ratio: {ded:.3f} > "
+                        f"{OBJSTORE_DEDUP_CEILING} (chunk dedup not "
+                        f"engaging on the second store)")
 
     # sharded-store datapoint: the shard-local path must not lose to the
     # gathered path (it currently wins ~2x — parity is the hard floor)

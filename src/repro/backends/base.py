@@ -88,6 +88,9 @@ class Backend(abc.ABC):
             "dedicated_thread": self.supports_dedicated_thread,
             "incremental": self.supports_incremental,
             "max_level": self.max_level,
+            # the object-store L4 rung rides the shared pipeline stacks,
+            # so every backend gains it from config, not from backend code
+            "objstore": self.engine.objstore_tier() is not None,
         }
 
     # --- uniform surface driven by TCL -------------------------------- #

@@ -66,6 +66,16 @@ class CheckpointConfig:
     dedicated_thread: bool = True              # CP-dedicated threads (§4.2.2)
     sharded_snapshot: bool = True              # shard-local Plan snapshots
     shard_writers: int = 4                     # parallel shard-file writers
+    # object-store L4 (repro.objstore): content-addressed uploads + catalog
+    objstore: bool = True
+    objstore_url: Optional[str] = None         # None → file:<dir>/objstore
+    objstore_chunk_bytes: int = 1 << 20
+    objstore_transfers: int = 4                # parallel transfer threads
+    # retention clauses over the objstore catalog: keep the newest
+    # ``keep_last`` checkpoints plus every ``keep_every``-th id; GC sweeps
+    # the chunks nothing references (both None → keep everything)
+    keep_last: Optional[int] = None
+    keep_every: Optional[int] = None
 
     def storage(self) -> StorageConfig:
         return StorageConfig(
@@ -78,6 +88,12 @@ class CheckpointConfig:
             promote_threshold=self.promote_threshold,
             sharded_store=self.sharded_snapshot,
             shard_writers=self.shard_writers,
+            objstore=self.objstore,
+            objstore_url=self.objstore_url,
+            objstore_chunk_bytes=self.objstore_chunk_bytes,
+            objstore_transfers=self.objstore_transfers,
+            objstore_keep_last=self.keep_last,
+            objstore_keep_every=self.keep_every,
         )
 
 

@@ -14,6 +14,14 @@ Layout (one tree per storage tier)::
         parity.group<g>.chk5     erasure parity for node-group g (L3)
       latest                     text file: id of newest committed checkpoint
 
+The object-store tier (repro.objstore) adds two trees outside this
+layout: the bucket itself (``<root>/objstore/`` under the default
+file: backend — content-addressed ``chunks/``, ``catalog/catalog.json``,
+``gc/``) and a node-local restore cache
+(``<node-local>/objstore-cache/ckpt-<id>/``) where catalog entries are
+materialized back into exactly this per-checkpoint dir shape, manifest
+included, so the recovery walk treats them like any committed dir.
+
 Commit protocol (coordinated checkpointing, §4.2.1): every rank writes its
 payload into ``ckpt-<id>.tmp``; rank 0 writes the manifest after an
 allgather of per-rank status; the .tmp → final rename is the commit point.
@@ -129,6 +137,16 @@ def latest_id(root: str) -> Optional[int]:
 def read_manifest(root: str, ckpt_id: int) -> Dict[str, Any]:
     with open(os.path.join(ckpt_dir(root, ckpt_id), MANIFEST)) as f:
         return json.load(f)
+
+
+def try_read_manifest(root: str, ckpt_id: int) -> Optional[Dict[str, Any]]:
+    """``read_manifest`` or None — for roots that may not exist yet (the
+    objstore cache dir is materialized *during* recovery, so the manifest
+    appears only after the catalog tier ran)."""
+    try:
+        return read_manifest(root, ckpt_id)
+    except (OSError, json.JSONDecodeError):
+        return None
 
 
 def manifest_files(meta: Dict[str, Any]) -> List[str]:

@@ -87,6 +87,13 @@ class StorageConfig:
     custom_groups: Optional[dict] = None       # SCR-style group overrides
     sharded_store: bool = True                 # shard-local Plan snapshots
     shard_writers: int = 4                     # parallel shard-file writers
+    # --- object-store L4 (repro.objstore) ---------------------------- #
+    objstore: bool = True                      # compose ObjectStoreTier at L4
+    objstore_url: Optional[str] = None         # None → file:<root>/objstore
+    objstore_chunk_bytes: int = 1 << 20        # content-addressed chunk size
+    objstore_transfers: int = 4                # parallel upload threads
+    objstore_keep_last: Optional[int] = None   # retention: newest N entries
+    objstore_keep_every: Optional[int] = None  # retention: pin id % K == 0
 
     @property
     def global_root(self) -> str:
@@ -468,6 +475,14 @@ class CheckpointPipeline:
         })
         mf.commit(plan.root, plan.ckpt_id, keep_last=0)  # pruning below
         self.prune_chains(plan.root)
+        # post-commit tier hooks, after the atomic rename: the objstore
+        # tier joins its chunk uploads and publishes the catalog entry
+        # here — a crash before this point leaves the previous catalog
+        # entry authoritative (chunks already uploaded are unreferenced
+        # garbage the next GC sweeps)
+        committed = mf.read_manifest(plan.root, plan.ckpt_id)
+        for tier in plan.tiers:
+            tier.commit(plan.ckpt_id, committed)
         # seconds = store work only (plan + tail), not CP-queue waiting
         return StoreReport(plan.ckpt_id, plan.level, plan.kind, packed.nbytes,
                            plan.plan_seconds + (time.time() - plan.t0),
@@ -581,20 +596,27 @@ class CheckpointPipeline:
         for root in roots:
             for i in mf.list_committed(root):
                 out.append((i, root))
-        return sorted(out)
+        # discovery beyond directory scans: the objstore tier answers from
+        # its catalog, so a run whose dirs are wiped still finds what the
+        # object store holds
+        for tier in self.ladder:
+            out.extend(tier.list_ids())
+        return sorted(set(out))
 
     def recover_payload(self, root: str, ckpt_id: int, rank: int
                         ) -> Optional[Tuple[bytes, Dict, str]]:
         """Walk the tier ladder L1 → L4 for one rank payload.
         Returns (payload, manifest, tier_name) or None."""
-        try:
-            man = mf.read_manifest(root, ckpt_id)
-        except OSError:
-            man = {}
+        man = mf.try_read_manifest(root, ckpt_id) or {}
         dirs = self.ctx.recovery_dirs(root, ckpt_id)   # scanned once, shared
         for tier in self.ladder:
             blob = tier.recover(ckpt_id, rank, root, man, dirs)
             if blob is not None:
+                if not man:
+                    # a catalog-backed tier materializes the checkpoint
+                    # dir (manifest included) during recover — re-read so
+                    # the restore walk sees kind/level/file coverage
+                    man = mf.try_read_manifest(root, ckpt_id) or {}
                 return blob, man, tier.name
         return None
 
@@ -624,9 +646,22 @@ class CheckpointPipeline:
                 return named, meta
         return None
 
+    def _root_rank(self, root: str) -> int:
+        """Walk order for the roots holding one checkpoint id: own local
+        dir, then peers' local dirs, then the global dir, then catalog-
+        backed roots (objstore cache) — mirroring the ladder's cost order
+        so the object store is the fallback, never the first read."""
+        if root == self.ctx.local_root:
+            return 0
+        if root == self.cfg.global_root:
+            return 2
+        if root in {t.root for t in self.ladder if t.level > 4}:
+            return 3
+        return 1                         # a reachable peer's local dir
+
     def _read_payload_any_tier(self, ckpt_id: int, by_id, rank: int
                                ) -> Optional[Tuple[bytes, Dict, str, str]]:
-        for root in by_id.get(ckpt_id, []):
+        for root in sorted(by_id.get(ckpt_id, []), key=self._root_rank):
             got = self.recover_payload(root, ckpt_id, rank)
             if got is not None:
                 return got + (root,)

@@ -41,6 +41,13 @@ CHK_DIFF = "DIFF"
 KNOWN_CODECS = ("int8",)
 #: container formats the Pack-side format tier can emit
 KNOWN_FORMATS = ("chk5",)
+#: the gated-dependency message for ``Protect(format="hdf5")`` — raised at
+#: *spec validation* time (constructing the spec), never deep in Pack, so
+#: a misconfigured protect fails before any checkpoint machinery runs;
+#: pinned verbatim by tests/test_protect_specs.py
+HDF5_GATE_MSG = (
+    "format='hdf5' needs h5py, which this environment does not ship; "
+    "CHK5 keeps the same self-describing semantics (format='chk5')")
 #: precision clause values → canonical dtype strings (core/formats.py
 #: resolves them; bf16/fp8 need ml_dtypes, which jax ships)
 PRECISIONS = {
@@ -97,10 +104,7 @@ class Protect:
                              f"have {list(KNOWN_CODECS)}")
         if self.format is not None and self.format not in KNOWN_FORMATS:
             if self.format == "hdf5":
-                raise ValueError(
-                    "format='hdf5' needs h5py, which this environment does "
-                    "not ship; CHK5 keeps the same self-describing "
-                    "semantics (format='chk5')")
+                raise ValueError(HDF5_GATE_MSG)
             raise ValueError(f"unknown format {self.format!r}; "
                              f"have {list(KNOWN_FORMATS)}")
         if self.precision is not None and self.precision not in PRECISIONS:

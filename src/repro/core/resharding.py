@@ -23,7 +23,9 @@ Read side:
   for a sharded leaf: index metadata + resolved chunk files.  It reads
   arbitrary index boxes by touching only the overlapping byte ranges of
   each chunk file (CHK5 partial reads), so a target device pulls exactly
-  its slice.
+  its slice.  int8-compressed chunks decode transparently
+  (:func:`read_chunk_slab` — partial reads dequantize only the touched
+  blocks; full-chunk reads verify the recorded dequantized crc32).
 - :func:`assemble_onto` builds a sharded ``jax.Array`` for a target
   ``Sharding`` directly from per-device region reads
   (``jax.make_array_from_single_device_arrays``) — store on 4×4, restore
@@ -41,6 +43,7 @@ from __future__ import annotations
 import glob
 import os
 import re
+import zlib
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -195,6 +198,10 @@ def split_sharded(named: Dict[str, Any], enabled: bool = True
 
 _SHARD_FILE_RE = re.compile(r"^rank(\d+)\.shard(\d+)\.chk5$")
 
+#: side-channel group for shard-chunk codec state (int8 block scales) —
+#: same convention as the gathered-leaf ``codecaux/`` group in core/tiers
+_CHUNK_AUX = "codecaux"
+
 
 def shard_file_name(prefix: str, j: int) -> str:
     return f"{prefix}.shard{j}.chk5"
@@ -202,6 +209,10 @@ def shard_file_name(prefix: str, j: int) -> str:
 
 def _chunk_dataset(name: str, k: int) -> str:
     return f"shard/{name}/shard-{k}"
+
+
+def _chunk_scale_dataset(ds: str) -> str:
+    return f"{_CHUNK_AUX}/{ds}/scale"
 
 
 def _precision_dtype(spec, arr_dtype) -> Optional[np.dtype]:
@@ -236,16 +247,30 @@ def write_shard_files(stage_dir: str, prefix: str, index_writer: CHK5Writer,
     of already-arrived shards.  Returns the shard file paths; all files
     land in the staging dir, so the multi-file set commits (or vanishes)
     atomically with the container.
+
+    A governing ``compress="int8"`` clause applies per chunk (float
+    leaves only): the chunk ships as a flat quantized payload + block
+    scales (``codecaux/…/scale`` in the same shard file) with a
+    dequantized crc32 recorded for the load-side verify; a chunk whose
+    roundtrip error exceeds ``max_error`` falls back to raw on its own
+    (``codec_fallback`` attr).
     """
-    from repro.core.tiers import clause_attrs
+    from repro.core.tiers import clause_attrs, int8_encode_array
     specs = specs or {}
-    work: List[Tuple[str, int, ShardChunk, Optional[np.dtype], Any]] = []
+    work: List[Tuple[str, int, ShardChunk, Optional[np.dtype], Any, bool]] = []
     for name in sorted(sharded):
         snap = sharded[name]
         spec = specs.get(name)
         cast = _precision_dtype(spec, str_to_dtype(snap.dtype))
+        # the compress="int8" clause now reaches shard chunks: each chunk
+        # quantizes independently (per-chunk max_error fallback), the
+        # block scales ride the same shard file, and a dequantized-crc32
+        # is recorded per chunk for the load-side verify — closing the
+        # ROADMAP "chunks ship raw" gap
+        codec = (spec is not None and getattr(spec, "compress", None) == "int8"
+                 and np.issubdtype(str_to_dtype(snap.dtype), np.floating))
         for k, chunk in enumerate(snap.chunks):
-            work.append((name, k, chunk, cast, spec))
+            work.append((name, k, chunk, cast, spec, codec))
 
     n_files = max(1, min(int(max_writers), len(work)))
     paths = [os.path.join(stage_dir, shard_file_name(prefix, j))
@@ -260,18 +285,33 @@ def write_shard_files(stage_dir: str, prefix: str, index_writer: CHK5Writer,
         with CHK5Writer(paths[j], fsync=False) as w:
             w.set_attrs("", {"shard_file": True,
                              "of": f"{prefix}.chk5"})
-            for i, (name, k, chunk, cast, _spec) in enumerate(work):
+            for i, (name, k, chunk, cast, spec, codec) in enumerate(work):
                 if i % n_files != j:
                     continue
-                arr = chunk.materialize()
+                orig = chunk.materialize()
+                arr = orig
                 if cast is not None and arr.dtype != cast:
                     arr = arr.astype(cast)
-                w.write_dataset(_chunk_dataset(name, k), arr, {
+                ds = _chunk_dataset(name, k)
+                attrs = {
                     "offset": [int(x) for x in chunk.offset],
                     "global_shape": [int(x) for x in
                                      sharded[name].global_shape],
                     "dtype": sharded[name].dtype,
-                })
+                }
+                if codec:
+                    q, scale, cattrs = int8_encode_array(
+                        arr, orig, getattr(spec, "max_error", None))
+                    attrs.update(cattrs)
+                    if q is not None:
+                        # flat int8 payload: element e of the chunk is
+                        # element e of q, so region reads stay element-
+                        # range reads (scales decoded per block)
+                        attrs["shape"] = [int(x) for x in chunk.shape]
+                        w.write_dataset(ds, q.reshape(-1), attrs)
+                        w.write_dataset(_chunk_scale_dataset(ds), scale)
+                        continue
+                w.write_dataset(ds, arr, attrs)
 
     # file count (the on-disk layout) is deterministic; only the thread
     # count adapts to the machine — more writer threads than cores just
@@ -310,10 +350,14 @@ def write_shard_files(stage_dir: str, prefix: str, index_writer: CHK5Writer,
                      datasets=[_chunk_dataset(name, k)
                                for k in range(len(snap.chunks))])
         if spec is not None and getattr(spec, "compress", None):
-            # codecs apply to gathered leaves; record why the clause was
-            # not honored rather than silently dropping it
-            attrs["codec_fallback"] = (
-                f"{spec.compress}: sharded leaf (chunks ship raw)")
+            if np.issubdtype(str_to_dtype(snap.dtype), np.floating):
+                # informational on the index: the per-chunk attrs are
+                # authoritative (a chunk may have fallen back on its own
+                # max_error check)
+                attrs["codec"] = spec.compress
+            else:
+                attrs["codec_fallback"] = (
+                    f"{spec.compress}: non-float leaf ({snap.dtype})")
         if spec is not None and spec.precision is not None and \
                 _precision_dtype(spec, str_to_dtype(snap.dtype)) is None:
             attrs.pop("precision", None)
@@ -334,6 +378,44 @@ class _ChunkRef:
     dataset: str
     offset: Tuple[int, ...]
     shape: Tuple[int, ...]
+
+
+def read_chunk_slab(rd: CHK5Reader, ds: str, chunk_shape: Sequence[int],
+                    r_lo: int, r_hi: int) -> np.ndarray:
+    """Read leading-dim rows [r_lo, r_hi) of one shard chunk dataset,
+    decoding the chunk codec when present — the one slab reader behind
+    ``ShardedLeafRef.read_index`` and ``ElasticLoader.read_region``.
+
+    int8 chunks (``compress="int8"`` shard stores) hold a flat quantized
+    payload plus per-block scales in a ``codecaux/.../scale`` sibling
+    dataset; a partial read touches only the overlapping q elements and
+    the covering scale blocks.  A read that covers the whole chunk also
+    verifies the recorded dequantized crc32 (partial reads skip crc like
+    every ``read_range`` — the region-restore fast path)."""
+    chunk_shape = tuple(int(x) for x in chunk_shape)
+    row_elems = int(np.prod(chunk_shape[1:])) if len(chunk_shape) > 1 else 1
+    e_lo, n = r_lo * row_elems, (r_hi - r_lo) * row_elems
+    attrs = rd.info(ds).get("attrs", {})
+    if attrs.get("codec") != "int8":
+        return rd.read_range(ds, e_lo, n)
+    block = int(attrs.get("codec_block", 1024))
+    out = rd.read_range(ds, e_lo, n).astype(np.float32)
+    if n:
+        b_lo = e_lo // block
+        b_hi = (e_lo + n - 1) // block + 1
+        scale = np.asarray(rd.read_range(_chunk_scale_dataset(ds),
+                                         b_lo, b_hi - b_lo), np.float32)
+        out *= scale[(e_lo + np.arange(n)) // block - b_lo]
+    rows = chunk_shape[0] if chunk_shape else 1
+    if r_lo == 0 and r_hi == rows and "roundtrip_crc32" in attrs:
+        back = out.reshape(chunk_shape).astype(str_to_dtype(attrs["dtype"]))
+        got = zlib.crc32(np.ascontiguousarray(back).tobytes()) & 0xFFFFFFFF
+        if got != attrs["roundtrip_crc32"]:
+            raise CHK5CorruptionError(
+                f"{rd.path}:{ds}: int8 chunk roundtrip mismatch "
+                f"(crc {got:#x} != recorded {attrs['roundtrip_crc32']:#x})")
+        return back
+    return out
 
 
 def _clip_box(box, offset, shape):
@@ -426,9 +508,7 @@ class ShardedLeafRef:
             rd = readers.get(c.path)
             if rd is None:
                 rd = readers[c.path] = CHK5Reader(c.path)
-            row_elems = int(np.prod(c.shape[1:])) if len(c.shape) > 1 else 1
-            return rd.read_range(c.dataset, r_lo * row_elems,
-                                 (r_hi - r_lo) * row_elems)
+            return read_chunk_slab(rd, c.dataset, c.shape, r_lo, r_hi)
 
         try:
             return _assemble_box(
@@ -599,8 +679,11 @@ class ElasticLoader:
                 else:
                     continue
                 gshape = [int(x) for x in a["global_shape"]]
+                # codec chunks store a flat quantized payload; the logical
+                # chunk shape rides the attrs
+                shp = tuple(int(x) for x in a.get("shape", m["shape"]))
                 self.chunks.setdefault(name, []).append(
-                    (rd, ds, offset, tuple(m["shape"]),
+                    (rd, ds, offset, shp,
                      a.get("dtype", m["dtype"]), gshape))
         for v in self.chunks.values():
             v.sort(key=lambda c: c[2])
@@ -625,9 +708,7 @@ class ElasticLoader:
 
         def read_slab(handle, r_lo: int, r_hi: int) -> np.ndarray:
             rd, ds, shp = handle
-            row_elems = int(np.prod(shp[1:])) if len(shp) > 1 else 1
-            return rd.read_range(ds, r_lo * row_elems,
-                                 (r_hi - r_lo) * row_elems)
+            return read_chunk_slab(rd, ds, shp, r_lo, r_hi)
 
         return _assemble_box(
             box, self.dtype(name),

@@ -98,3 +98,10 @@ class StorageEngine:
         fallback included)."""
         got = self.pipeline.recover_payload(root, ckpt_id, rank)
         return got[0] if got is not None else None
+
+    def objstore_tier(self):
+        """The composed L4 object-store tier (repro.objstore), or None
+        when ``cfg.objstore`` is off — the handle tools/benchmarks use to
+        reach the catalog and the upload/dedup stats."""
+        return next((t for t in self.pipeline.ladder
+                     if t.name == "objstore"), None)

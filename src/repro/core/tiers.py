@@ -16,8 +16,19 @@ The four built-ins mirror the paper (§4.2.1) / FTI semantics:
     ``ErasureTier``   L3  Reed–Solomon (or XOR) parity across the node group
     ``GlobalTier``    L4  parallel-file-system write (global directory)
 
-Write stacks compose tiers (L2 = local + partner, L3 = local + erasure);
-the recovery ladder tries every tier in level order L1 → L2 → L3 → L4.
+plus the object-store rung (``repro.objstore.tier.ObjectStoreTier``,
+composed into the L4 stack when ``StorageConfig.objstore`` is on):
+content-addressed chunk uploads at Place, an atomically-published
+checkpoint catalog at Commit, and a catalog-driven restore path that
+survives every checkpoint directory being wiped.
+
+Write stacks compose tiers (L2 = local + partner, L3 = local + erasure,
+L4 = global + objstore); the recovery ladder tries every tier in level
+order L1 → L2 → L3 → L4 → objstore.  Tiers participate in two more
+pipeline moments besides ``place``/``recover``: ``commit`` (after the
+local atomic rename — where the objstore tier publishes its catalog
+entry) and ``list_ids`` (checkpoint discovery beyond directory scans —
+how a wiped run finds what the catalog still holds).
 Backends select/compose stacks via ``Backend.compose_tiers`` — adding a new
 tier (compression, object store, multi-node batching) means subclassing
 ``Tier`` and composing it into a stack; nothing in the pipeline changes.
@@ -45,7 +56,7 @@ import abc
 import json
 import os
 import zlib
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -77,6 +88,12 @@ class TierContext:
         self.cfg = cfg
         self.comm = comm
         self.topo = topo
+        # roots owned by catalog-backed tiers (the objstore restore
+        # cache): listed in recovery_dirs so shard files resolve there,
+        # but the owning tier is the only one that answers payload reads
+        # from them — it digest-verifies the cache against its catalog,
+        # which the byte-oblivious directory tiers cannot
+        self.catalog_roots: set = set()
 
     @property
     def local_root(self) -> str:
@@ -161,6 +178,18 @@ class Tier(abc.ABC):
         ``extra_files`` are the payload's sibling shard files (sharded
         stores stage a multi-file set)."""
 
+    def commit(self, ckpt_id: int, manifest: Dict) -> None:
+        """Post-commit hook: runs after the checkpoint's atomic ``.tmp`` →
+        final rename, with the committed manifest.  The objstore tier
+        publishes its catalog entry here — so the catalog only ever
+        advertises checkpoints whose local commit succeeded."""
+
+    def list_ids(self) -> List[Tuple[int, str]]:
+        """Checkpoint ids this tier can produce beyond the pipeline's
+        directory scans → ``[(ckpt_id, root)]`` (the catalog-discovery
+        hook; default none)."""
+        return []
+
     @abc.abstractmethod
     def recover(self, ckpt_id: int, rank: int, root: str,
                 manifest: Dict, dirs: List[str]) -> Optional[bytes]:
@@ -181,6 +210,8 @@ class LocalTier(Tier):
         for d in dirs:
             if d.startswith(self.ctx.global_root):
                 continue               # global payloads are GlobalTier's rung
+            if any(d.startswith(r) for r in self.ctx.catalog_roots):
+                continue               # objstore cache: its tier verifies
             blob = _valid_payload(os.path.join(d, f"rank{rank}.chk5"))
             if blob is not None:
                 return blob
@@ -324,13 +355,21 @@ class GlobalTier(Tier):
 
 
 def default_tier_stacks(ctx: TierContext) -> Dict[int, List[Tier]]:
-    """The FTI ladder: L2/L3 stack a redundancy tier on the local write."""
+    """The FTI ladder: L2/L3 stack a redundancy tier on the local write;
+    L4 stacks the content-addressed object store on the global-directory
+    write (``StorageConfig.objstore`` gates it — the survivable rung the
+    recovery ladder falls back to when every directory is gone)."""
     local = LocalTier(ctx)
+    l4: List[Tier] = [GlobalTier(ctx)]
+    if getattr(ctx.cfg, "objstore", True):
+        # lazy import: objstore.tier subclasses Tier from this module
+        from repro.objstore.tier import ObjectStoreTier
+        l4.append(ObjectStoreTier(ctx))
     return {
         1: [local],
         2: [local, PartnerTier(ctx)],
         3: [local, ErasureTier(ctx)],
-        4: [GlobalTier(ctx)],
+        4: l4,
     }
 
 
@@ -409,6 +448,39 @@ class CHK5FormatTier(PackTier):
         w.write_dataset(f"data/{name}", arr, attrs)
 
 
+def int8_encode_array(arr: np.ndarray, orig: np.ndarray,
+                      max_error: Optional[float]):
+    """The one int8 payload encoder behind both the gathered-leaf
+    ``Int8CompressTier`` and the shard-chunk codec
+    (core/resharding.write_shard_files): quantize ``arr`` (the
+    precision-limited values), measure the roundtrip against ``orig``
+    (the original values, whose dtype the restore must reproduce).
+
+    → ``(q, scale, attrs)`` on success — ``attrs`` carries
+    ``codec``/``codec_block``/``codec_error``/``roundtrip_crc32`` so the
+    read side can dispatch and verify — or ``(None, None, attrs)`` with a
+    ``codec_fallback`` reason when ``max_error`` is exceeded."""
+    from repro.dist.compression import (
+        BLOCK, dequantize_int8_np, quantize_int8_np)
+    q, scale = quantize_int8_np(arr)
+    back = dequantize_int8_np(q, scale, arr.shape).astype(orig.dtype)
+    # relative-L2 roundtrip error in f32 (the f64 casts dominated the
+    # compressed-store overhead); an overflow degrades to inf, which
+    # simply trips the max_error fallback — never a silent accept
+    d = (back.astype(np.float32, copy=False)
+         - orig.astype(np.float32, copy=False)).reshape(-1)
+    a32 = orig.astype(np.float32, copy=False).reshape(-1)
+    err = float(np.sqrt(np.dot(d, d))
+                / max(float(np.sqrt(np.dot(a32, a32))), 1e-12))
+    if max_error is not None and err > max_error:
+        return None, None, {"codec_fallback": (
+            f"int8: roundtrip error {err:.3e} > max_error {max_error:.3e}")}
+    attrs = {"codec": Int8CompressTier.codec, "codec_block": BLOCK,
+             "codec_error": err,
+             "roundtrip_crc32": zlib.crc32(back.tobytes()) & 0xFFFFFFFF}
+    return q, scale, attrs
+
+
 class Int8CompressTier(PackTier):
     """``compress="int8"`` — per-block max-abs int8 quantization of the
     packed payload (dist/compression.py), the ROADMAP's compressed-payload
@@ -431,8 +503,6 @@ class Int8CompressTier(PackTier):
         return spec is not None and spec.compress == self.codec
 
     def encode(self, w, name, arr, spec, attrs):
-        from repro.dist.compression import (
-            BLOCK, dequantize_int8_np, quantize_int8_np)
         arr = np.asarray(arr)
         if not np.issubdtype(arr.dtype, np.floating):
             CHK5FormatTier().encode(w, name, arr, spec, dict(
@@ -447,26 +517,13 @@ class Int8CompressTier(PackTier):
             target = resolve_precision(spec.precision)
             if arr.dtype != target:
                 arr = arr.astype(target)
-        q, scale = quantize_int8_np(arr)
-        back = dequantize_int8_np(q, scale, arr.shape).astype(orig.dtype)
-        # relative-L2 roundtrip error in f32 (the f64 casts dominated the
-        # compressed-store overhead); an overflow degrades to inf, which
-        # simply trips the max_error fallback — never a silent accept
-        d = (back.astype(np.float32, copy=False)
-             - orig.astype(np.float32, copy=False)).reshape(-1)
-        a32 = orig.astype(np.float32, copy=False).reshape(-1)
-        err = float(np.sqrt(np.dot(d, d))
-                    / max(float(np.sqrt(np.dot(a32, a32))), 1e-12))
-        if spec.max_error is not None and err > spec.max_error:
-            CHK5FormatTier().encode(w, name, orig, spec, dict(
-                attrs, codec_fallback=(
-                    f"int8: roundtrip error {err:.3e} > "
-                    f"max_error {spec.max_error:.3e}")))
+        q, scale, codec_attrs = int8_encode_array(arr, orig, spec.max_error)
+        if q is None:
+            CHK5FormatTier().encode(w, name, orig, spec,
+                                    dict(attrs, **codec_attrs))
             return
-        attrs = dict(attrs, codec=self.codec, codec_block=BLOCK,
-                     codec_error=err, dtype=dtype_to_str(orig.dtype),
-                     shape=[int(x) for x in orig.shape],
-                     roundtrip_crc32=zlib.crc32(back.tobytes()) & 0xFFFFFFFF)
+        attrs = dict(attrs, **codec_attrs, dtype=dtype_to_str(orig.dtype),
+                     shape=[int(x) for x in orig.shape])
         w.write_dataset(f"data/{name}", q, attrs)
         w.write_dataset(f"{_AUX_GROUP}/{name}/scale", scale)
 

@@ -1,0 +1,22 @@
+"""repro.objstore — content-addressed object-store L4: an S3-shaped
+client abstraction, chunk-level dedup uploads, a CAS-guarded checkpoint
+catalog, crash-safe retention GC, and the ``ObjectStoreTier`` that
+composes them into the checkpoint pipeline's level-4 stack."""
+from repro.objstore.catalog import Catalog, CatalogConflictError
+from repro.objstore.chunks import ChunkUploader, FileEntry, chunk_key
+from repro.objstore.client import (
+    LocalFSObjectStore,
+    MemoryObjectStore,
+    ObjectStore,
+    ObjectStoreError,
+    PreconditionFailed,
+    make_object_store,
+)
+from repro.objstore.gc import collect, retention_split
+
+__all__ = [
+    "Catalog", "CatalogConflictError", "ChunkUploader", "FileEntry",
+    "LocalFSObjectStore", "MemoryObjectStore", "ObjectStore",
+    "ObjectStoreError", "PreconditionFailed", "chunk_key", "collect",
+    "make_object_store", "retention_split",
+]

@@ -1,0 +1,177 @@
+"""Content-addressed chunk layer — DIFF semantics at the storage layer.
+
+Checkpoint files (CHK5 containers and their sibling shard files) are
+split into fixed-size chunks; each chunk is stored under its sha256
+(``chunks/<h[:2]>/<h>``), so a chunk that already exists in the store is
+never uploaded again.  Consecutive checkpoints of a training run share
+almost all of their payload bytes — the container layout is append-only
+and deterministic, so an unchanged leaf produces byte-identical chunks
+at the same offsets — which makes the second upload a small fraction of
+the first (the ``objstore_dedup_ratio`` datapoint CI gates).
+
+Uploads run on a bounded pool of transfer threads
+(``StorageConfig.objstore_transfers``, same pattern as
+``shard_writers``): :meth:`ChunkUploader.submit_file` returns a
+:class:`PendingFile` immediately and the Place stage overlaps the
+transfers with the rest of the store tail; ``result()`` joins them.
+
+Content addressing is also the resume story: re-running an interrupted
+upload re-splits the file and skips every chunk that already landed —
+no partial-object state to reconcile (the client's multipart API exists
+for single large objects that are *not* chunked, e.g. future
+whole-container mirroring).
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.objstore.client import ObjectStore, ObjectStoreError
+
+DEFAULT_CHUNK_BYTES = 1 << 20
+
+
+def chunk_key(digest: str) -> str:
+    return f"chunks/{digest[:2]}/{digest}"
+
+
+def iter_file_chunks(path: str, chunk_bytes: int
+                     ) -> Iterator[Tuple[str, bytes]]:
+    """→ (sha256 hex, chunk bytes) for every fixed-size chunk of ``path``."""
+    with open(path, "rb") as f:
+        while True:
+            data = f.read(chunk_bytes)
+            if not data:
+                break
+            yield hashlib.sha256(data).hexdigest(), data
+
+
+@dataclass
+class FileEntry:
+    """One file of a catalog entry: its size plus the ordered chunk list
+    (digest, nbytes) that reassembles it."""
+    name: str
+    size: int
+    chunks: List[Tuple[str, int]]
+
+    def to_json(self) -> Dict:
+        return {"size": self.size,
+                "chunks": [[h, n] for h, n in self.chunks]}
+
+    @staticmethod
+    def from_json(name: str, d: Dict) -> "FileEntry":
+        return FileEntry(name=name, size=int(d["size"]),
+                         chunks=[(h, int(n)) for h, n in d["chunks"]])
+
+
+@dataclass
+class PendingFile:
+    """An in-flight chunked upload: metadata is final, transfers may not
+    be — ``result()`` joins them (raising the first failure).  Holds the
+    source file open until then (transfer workers ``pread`` from it, so
+    the upload survives the stage dir's commit-time rename; dropping an
+    unjoined PendingFile closes the file on GC)."""
+    name: str
+    size: int
+    chunks: List[Tuple[str, int]]
+    futures: List[Future] = field(default_factory=list)
+    _file: object = None
+
+    def result(self) -> FileEntry:
+        try:
+            for f in self.futures:
+                f.result()
+        finally:
+            if self._file is not None:
+                self._file.close()
+                self._file = None
+        return FileEntry(self.name, self.size, self.chunks)
+
+
+class ChunkUploader:
+    """Dedup-aware parallel chunk uploads against one object store."""
+
+    def __init__(self, store: ObjectStore,
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES, transfers: int = 4):
+        self.store = store
+        self.chunk_bytes = int(chunk_bytes)
+        self.transfers = max(1, int(transfers))
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._lock = threading.Lock()
+        self.stats: Dict[str, int] = {
+            "chunks_uploaded": 0, "chunks_deduped": 0,
+            "bytes_uploaded": 0, "bytes_deduped": 0,
+        }
+
+    def _executor(self) -> ThreadPoolExecutor:
+        with self._lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.transfers,
+                    thread_name_prefix="objstore-up")
+            return self._pool
+
+    def _put_chunk(self, fd: int, offset: int, nbytes: int,
+                   digest: str) -> None:
+        # re-read in the worker (os.pread — positionless, thread-safe):
+        # capturing the chunk bytes in the executor queue would hold the
+        # whole un-deduped payload in RAM at once on a first store
+        data = os.pread(fd, nbytes, offset)
+        self.store.put(chunk_key(digest), data)
+        with self._lock:
+            self.stats["chunks_uploaded"] += 1
+            self.stats["bytes_uploaded"] += nbytes
+
+    def submit_file(self, path: str, name: Optional[str] = None
+                    ) -> PendingFile:
+        """Split ``path`` and submit every *missing* chunk to the transfer
+        pool; chunks already in the store are skipped (dedup).  Returns
+        immediately — the caller joins via :meth:`PendingFile.result`."""
+        pend = PendingFile(name=name or os.path.basename(path),
+                           size=os.path.getsize(path), chunks=[])
+        pend._file = open(path, "rb")
+        fd = pend._file.fileno()
+        ex = self._executor()
+        offset = 0
+        for digest, data in iter_file_chunks(path, self.chunk_bytes):
+            nbytes = len(data)
+            pend.chunks.append((digest, nbytes))
+            if self.store.exists(chunk_key(digest)):
+                with self._lock:
+                    self.stats["chunks_deduped"] += 1
+                    self.stats["bytes_deduped"] += nbytes
+            else:
+                pend.futures.append(
+                    ex.submit(self._put_chunk, fd, offset, nbytes, digest))
+            offset += nbytes
+        return pend
+
+    def upload_file(self, path: str, name: Optional[str] = None) -> FileEntry:
+        """Synchronous convenience: submit + join."""
+        return self.submit_file(path, name).result()
+
+
+def fetch_file(store: ObjectStore, entry: FileEntry, dest: str) -> None:
+    """Reassemble ``entry`` at ``dest``, verifying every chunk's digest
+    (a corrupt or truncated chunk fails the fetch, never a silent torn
+    file — the staged ``.part`` only replaces ``dest`` when complete)."""
+    os.makedirs(os.path.dirname(dest), exist_ok=True)
+    tmp = dest + ".part"
+    with open(tmp, "wb") as f:
+        for digest, nbytes in entry.chunks:
+            data = store.get(chunk_key(digest))
+            if len(data) != nbytes or \
+                    hashlib.sha256(data).hexdigest() != digest:
+                raise ObjectStoreError(
+                    f"chunk {digest[:12]}… of {entry.name} is corrupt "
+                    f"({len(data)} bytes vs recorded {nbytes})")
+            f.write(data)
+    if os.path.getsize(tmp) != entry.size:
+        raise ObjectStoreError(
+            f"{entry.name}: reassembled size {os.path.getsize(tmp)} != "
+            f"recorded {entry.size}")
+    os.replace(tmp, dest)

@@ -1,4 +1,5 @@
-"""``python -m repro.tools.chkls <file.chk5>`` — inspect CHK5 containers.
+"""``python -m repro.tools.chkls <file.chk5 | objstore-root>`` — inspect
+CHK5 containers and object-store checkpoint catalogs.
 
 The paper's HDF5 argument: checkpoints double as analyzable datasets, with
 standard tools. This is that tool for CHK5.  Clause-carrying stores
@@ -6,11 +7,18 @@ standard tools. This is that tool for CHK5.  Clause-carrying stores
 listing shows the interesting ones (codec, kind, precision, fallbacks) and
 ``--json`` emits the full machine-readable inventory so CI can assert on
 container contents.
+
+Pointed at a *directory* (an object-store root — the ``file:`` bucket of
+repro.objstore, e.g. ``<ckpt-dir>/objstore``), it lists the checkpoint
+catalog instead: every published entry (id, kind/level from the recorded
+manifest, file set with chunk counts, pin state) plus the store-wide
+chunk inventory — ``--json`` again machine-readable for CI.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 import numpy as np
@@ -36,8 +44,68 @@ def _clause_str(name: str, attrs: dict) -> str:
     return " ".join(parts)
 
 
+def catalog_inventory(root: str) -> dict:
+    """The machine-readable catalog listing for an object-store root."""
+    from repro.objstore.catalog import Catalog
+    from repro.objstore.client import make_object_store
+    store = make_object_store(f"file:{root}")
+    cat, _ = Catalog(store).read()
+    entries = []
+    for key in sorted(cat["entries"], key=int):
+        e = cat["entries"][key]
+        man = e.get("manifest", {})
+        files = {}
+        n_chunks = total = 0
+        for name, fe in sorted(e.get("files", {}).items()):
+            files[name] = {"size": fe["size"], "n_chunks": len(fe["chunks"])}
+            n_chunks += len(fe["chunks"])
+            total += fe["size"]
+        entries.append({
+            "id": int(e.get("id", key)), "pinned": bool(e.get("pinned")),
+            "kind": man.get("kind"), "level": man.get("level"),
+            "wall_time": man.get("wall_time"),
+            "files": files, "total_bytes": total, "n_chunks": n_chunks,
+        })
+    return {"root": root, "epoch": int(cat["epoch"]), "entries": entries,
+            "stored_chunks": len(store.list("chunks/"))}
+
+
+def list_catalog(root: str, as_json: bool) -> int:
+    from repro.objstore.catalog import CATALOG_KEY
+    from repro.objstore.client import make_object_store
+    store = make_object_store(f"file:{root}")
+    # refuse to call an arbitrary directory an "empty catalog" — a wrong
+    # path (the ckpt root instead of <root>/objstore) must fail loudly,
+    # not read as a store that exists and holds nothing
+    if not store.exists(CATALOG_KEY) and not store.list("chunks/"):
+        print(f"{root}: not an object-store root (no {CATALOG_KEY}, no "
+              f"chunks/) — point chkls at the bucket, e.g. "
+              f"<ckpt-dir>/objstore", file=sys.stderr)
+        return 2
+    inv = catalog_inventory(root)
+    if as_json:
+        print(json.dumps({"catalog": inv}, indent=1, sort_keys=True))
+        return 0
+    if not inv["entries"]:
+        print(f"{root}: empty catalog (epoch {inv['epoch']})")
+        return 0
+    print(f"catalog at {root}: epoch {inv['epoch']}, "
+          f"{inv['stored_chunks']} stored chunks")
+    for e in inv["entries"]:
+        pin = " pinned" if e["pinned"] else ""
+        print(f"  ckpt {e['id']:<6d} kind={e['kind']} level={e['level']}"
+              f" files={len(e['files'])} chunks={e['n_chunks']}"
+              f" {e['total_bytes']:,d} B{pin}")
+        for name, f in e["files"].items():
+            print(f"    {name:40s} {f['size']:>12,d} B"
+                  f"  ({f['n_chunks']} chunks)")
+    return 0
+
+
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description="list CHK5 checkpoint contents")
+    ap = argparse.ArgumentParser(
+        description="list CHK5 checkpoint contents (or, for a directory, "
+                    "an object-store checkpoint catalog)")
     ap.add_argument("file")
     ap.add_argument("--verify", action="store_true", help="check all crc32s")
     ap.add_argument("--stats", action="store_true",
@@ -45,6 +113,9 @@ def main(argv=None) -> int:
     ap.add_argument("--json", action="store_true", dest="as_json",
                     help="machine-readable inventory (attrs included)")
     args = ap.parse_args(argv)
+
+    if os.path.isdir(args.file):
+        return list_catalog(args.file, args.as_json)
 
     rd = CHK5Reader(args.file, verify=args.verify)
 

@@ -52,12 +52,15 @@ def _store(b, rank, kind, level):
 
 
 def test_recovery_ladder_is_l1_to_l4(tmp_path):
-    """The read path tries tiers in FTI's ladder order L1→L2→L3→L4."""
+    """The read path tries tiers in FTI's ladder order L1→L2→L3→L4, with
+    the object store as the final rung (catalog-backed restore — the one
+    tier that survives every directory being wiped)."""
     cluster, backends = _backends(tmp_path, "fti")
     names = [t.name for t in backends[0].pipeline.ladder]
-    assert names == ["local", "partner", "erasure", "global"]
+    assert names == ["local", "partner", "erasure", "global", "objstore"]
     levels = [t.level for t in backends[0].pipeline.ladder]
-    assert levels == sorted(levels) == [1, 2, 3, 4]
+    assert levels == sorted(levels) == [1, 2, 3, 4, 5]
+    assert backends[0].capabilities()["objstore"] is True
 
 
 @pytest.mark.parametrize("backend", ["fti", "scr", "veloc"])

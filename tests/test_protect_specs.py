@@ -9,6 +9,7 @@ import pytest
 from repro.core.context import CheckpointConfig, CheckpointContext
 from repro.core.protect import (
     CHK_DIFF,
+    HDF5_GATE_MSG,
     Protect,
     _path_str,
     flatten_named,
@@ -134,6 +135,22 @@ def test_protect_clause_validation():
     spec = Protect("a/**", kind=CHK_DIFF, compress="int8", precision="bf16")
     assert spec.clauses() == {"kind": CHK_DIFF, "compress": "int8",
                               "precision": "bf16"}
+
+
+def test_hdf5_gate_raises_at_spec_validation_time():
+    """The missing-h5py gate fires when the spec is *constructed* — the
+    user's ``ctx.protect(Protect(..., format="hdf5"))`` line — never deep
+    inside Pack where the traceback would point at checkpoint internals.
+    The message is pinned verbatim (it names the dependency and the
+    CHK5 equivalence, the paper's §4.2.4 portability argument)."""
+    with pytest.raises(ValueError) as ei:
+        Protect("params/**", format="hdf5")
+    assert str(ei.value) == HDF5_GATE_MSG
+    assert "h5py" in HDF5_GATE_MSG and "chk5" in HDF5_GATE_MSG
+    # no store machinery involved: a context is never even constructed,
+    # and a valid format clause still passes validation
+    assert Protect("params/**", format="chk5").clauses() == {
+        "format": "chk5"}
 
 
 def test_flat_selector_strings_shim_to_clauseless_specs():
