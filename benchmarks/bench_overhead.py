@@ -91,11 +91,15 @@ def compressed_store(repeats: int = 3) -> Dict[str, float]:
 
 def objstore_store(repeats: int = 3) -> Dict[str, float]:
     """Object-store L4 datapoint: wall time of a chunked+cataloged store
-    (``objstore_store_s``) and the dedup ratio — a second store after a
-    small param delta must upload <30% of the first's bytes (unchanged
-    content-addressed chunks upload nothing; ``objstore_dedup_ratio`` is
-    gated hard in check_overhead_regression.py).  Synchronous fti so the
-    Place uploads + Commit catalog publish are inside the timing."""
+    (``objstore_store_s``), the store-path goodput
+    (``objstore_goodput_bps`` = payload bytes / first-store wall time —
+    the zero-stall fused Pack → upload path keeps this near local write
+    bandwidth because Place never re-reads staged files) and the dedup
+    ratio — a second store after a small param delta must upload <30% of
+    the first's bytes (unchanged content-addressed chunks upload
+    nothing; both gated in check_overhead_regression.py).  Synchronous
+    fti so the Place uploads + Commit catalog publish are inside the
+    timing."""
     import numpy as np
     import jax.numpy as jnp
     from repro.core.context import CheckpointConfig, CheckpointContext
@@ -103,7 +107,7 @@ def objstore_store(repeats: int = 3) -> Dict[str, float]:
     n = 1 << 23                      # 32 MiB of f32 payload → 32 chunks
     rng = np.random.default_rng(0)
     base = rng.normal(size=n).astype(np.float32)
-    times, ratios = [], []
+    times, ratios, goodputs = [], [], []
     for r in range(repeats):
         d = "/tmp/bo-objstore"
         shutil.rmtree(d, ignore_errors=True)
@@ -111,8 +115,10 @@ def objstore_store(repeats: int = 3) -> Dict[str, float]:
             dir=d, backend="fti", dedicated_thread=False))
         tier = ctx.tcl.backend.engine.objstore_tier()
         t0 = time.time()
-        ctx.store({"params": {"w": jnp.asarray(base)}}, id=1, level=4)
-        times.append(time.time() - t0)
+        rep = ctx.store({"params": {"w": jnp.asarray(base)}}, id=1, level=4)
+        dt = time.time() - t0
+        times.append(dt)
+        goodputs.append(rep.bytes_payload / max(dt, 1e-9))
         up1 = tier.uploader.stats["bytes_uploaded"]
         delta = base.copy()
         delta[:4096] += 1.0          # a small param delta
@@ -122,7 +128,50 @@ def objstore_store(repeats: int = 3) -> Dict[str, float]:
         ctx.shutdown()
         shutil.rmtree(d, ignore_errors=True)
     return {"objstore_store_s": min(times),
+            "objstore_goodput_bps": max(goodputs),
             "objstore_dedup_ratio": min(ratios)}
+
+
+def objstore_shift_dedup() -> Dict[str, float]:
+    """Boundary-shift dedup datapoint (deterministic, byte-level — no
+    timing): 16 MiB of random bytes, then the same payload with 1 KiB
+    inserted at the 25 % mark, streamed through the CDC chunk uploader.
+    A fixed-size chunker re-uploads every chunk after the insertion
+    point (offsets shift); content-defined cuts re-synchronize within
+    ~one average chunk, so the re-uploaded delta must be well under the
+    fixed-size cost.  ``objstore_shift_dedup_vs_fixed`` = CDC delta
+    bytes / fixed-size delta bytes, gated hard at 0.30 in
+    check_overhead_regression.py."""
+    import hashlib
+    import numpy as np
+    from repro.objstore.cdc import CDCParams
+    from repro.objstore.chunks import ChunkUploader, DEFAULT_CHUNK_BYTES
+    from repro.objstore.client import MemoryObjectStore
+
+    rng = np.random.default_rng(7)
+    v1 = rng.integers(0, 256, 16 << 20, dtype=np.uint8).tobytes()
+    insert = rng.integers(0, 256, 1024, dtype=np.uint8).tobytes()
+    at = len(v1) // 4
+    v2 = v1[:at] + insert + v1[at:]
+
+    up = ChunkUploader(MemoryObjectStore(), cdc=CDCParams())
+    for tag, payload in (("v1", v1), ("v2", v2)):
+        before = up.stats["bytes_uploaded"]
+        s = up.open_stream(tag)
+        s.write(payload)
+        s.finish()
+        s.pending().result()
+        if tag == "v2":
+            cdc_delta = up.stats["bytes_uploaded"] - before
+    up.close()
+
+    def fixed_digests(buf):
+        return [(hashlib.sha256(buf[o:o + DEFAULT_CHUNK_BYTES]).hexdigest(),
+                 len(buf[o:o + DEFAULT_CHUNK_BYTES]))
+                for o in range(0, len(buf), DEFAULT_CHUNK_BYTES)]
+    seen = {h for h, _ in fixed_digests(v1)}
+    fixed_delta = sum(n for h, n in fixed_digests(v2) if h not in seen)
+    return {"objstore_shift_dedup_vs_fixed": cdc_delta / max(fixed_delta, 1)}
 
 
 _SHARDED_SCRIPT = textwrap.dedent("""
@@ -199,17 +248,23 @@ def run(repeats: int = 3) -> Dict[str, float]:
     natives = {"fti": heat2d_fti, "scr": heat2d_scr, "veloc": heat2d_veloc}
     out: Dict[str, float] = {}
     for backend, native_mod in natives.items():
-        t_native = min(timed_run_with_fault(
-            native_mod, f"/tmp/bo-native-{backend}") for _ in range(repeats))
-        t_openchk = min(timed_run_with_fault(
-            heat2d_openchk, f"/tmp/bo-openchk-{backend}", backend=backend)
-            for _ in range(repeats))
-        out[f"native_{backend}_s"] = t_native
-        out[f"openchk_{backend}_s"] = t_openchk
-        out[f"overhead_ratio_{backend}"] = t_openchk / t_native
+        # interleave native/openchk repeats (like the sharded-store bench)
+        # so shared machine drift hits both variants alike — sequential
+        # blocks bias the ratio by whatever the host was doing during the
+        # second block
+        t_native, t_openchk = [], []
+        for _ in range(repeats):
+            t_native.append(timed_run_with_fault(
+                native_mod, f"/tmp/bo-native-{backend}"))
+            t_openchk.append(timed_run_with_fault(
+                heat2d_openchk, f"/tmp/bo-openchk-{backend}", backend=backend))
+        out[f"native_{backend}_s"] = min(t_native)
+        out[f"openchk_{backend}_s"] = min(t_openchk)
+        out[f"overhead_ratio_{backend}"] = min(t_openchk) / min(t_native)
     out.update(compressed_store(repeats=repeats))
     out.update(sharded_store(repeats=repeats))
     out.update(objstore_store(repeats=repeats))
+    out.update(objstore_shift_dedup())
     return out
 
 

@@ -69,7 +69,11 @@ class CheckpointConfig:
     # object-store L4 (repro.objstore): content-addressed uploads + catalog
     objstore: bool = True
     objstore_url: Optional[str] = None         # None → file:<dir>/objstore
-    objstore_chunk_bytes: int = 1 << 20
+    objstore_chunk_bytes: int = 1 << 20        # fixed-mode chunk size
+    objstore_chunking: str = "cdc"             # "cdc" | "fixed"
+    objstore_cdc_min_bytes: int = 256 << 10    # CDC lower cut bound
+    objstore_cdc_avg_bytes: int = 1 << 20      # CDC target average
+    objstore_cdc_max_bytes: int = 4 << 20      # CDC forced-cut bound
     objstore_transfers: int = 4                # parallel transfer threads
     # retention clauses over the objstore catalog: keep the newest
     # ``keep_last`` checkpoints plus every ``keep_every``-th id; GC sweeps
@@ -91,6 +95,10 @@ class CheckpointConfig:
             objstore=self.objstore,
             objstore_url=self.objstore_url,
             objstore_chunk_bytes=self.objstore_chunk_bytes,
+            objstore_chunking=self.objstore_chunking,
+            objstore_cdc_min_bytes=self.objstore_cdc_min_bytes,
+            objstore_cdc_avg_bytes=self.objstore_cdc_avg_bytes,
+            objstore_cdc_max_bytes=self.objstore_cdc_max_bytes,
             objstore_transfers=self.objstore_transfers,
             objstore_keep_last=self.keep_last,
             objstore_keep_every=self.keep_every,

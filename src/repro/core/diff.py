@@ -124,6 +124,19 @@ class DiffEngine:
                 pass
         self._clean_refs.pop(path, None)
 
+    def digest_key(self, path: str) -> Optional[str]:
+        """Compact fingerprint of ``path``'s current device-side block
+        digests, or None when no digest chain exists for it (diff-unaware
+        backends, never-stored leaves).  Used as a chunk-layout reuse key
+        on the fused Pack → upload path: equal fingerprints mean the
+        leaf's bytes are unchanged since the digests were recorded, so
+        the chunk stream can replay its previous CDC cut layout instead
+        of re-scanning — DIFF-clean leaves never touch host hashing."""
+        d = self._digests.get(path)
+        if d is None:
+            return None
+        return ops.digest_fingerprint(d)
+
     def update_digests_full(self, named: Dict[str, Any]) -> None:
         """After a FULL store: record digests so the next DIFF has a base."""
         for path, leaf in named.items():

@@ -84,16 +84,34 @@ def resolve_precision(name: str) -> np.dtype:
 
 
 class CHK5Writer:
-    def __init__(self, path: str, fsync: bool = True):
+    def __init__(self, path: str, fsync: bool = True, sink=None):
         """``fsync=False`` defers durability to the caller (multi-file
         shard sets fsync the whole batch once all writers finished — one
-        journal settle instead of one per file)."""
+        journal settle instead of one per file).
+
+        ``sink`` is an optional streaming byte sink (the fused Pack →
+        chunk-stream path, ``repro.objstore.chunks.ChunkStream``): every
+        byte written to the file is teed into it in order, dataset starts
+        are signaled as boundary hints (``cut``), datasets with an entry
+        in :attr:`region_keys` are bracketed as digest-keyed regions
+        (``begin_region``/``end_region``), and ``close`` finishes the
+        sink — so by the time the staged file is durable, its chunk
+        uploads are already in flight and nothing re-reads it."""
         self.path = path
         self._fsync = fsync
+        self._sink = sink
+        #: dataset name → layout-reuse key (set by the pipeline for FULL
+        #: leaves whose device-side digests identify their bytes)
+        self.region_keys: Dict[str, str] = {}
         self._f = open(path, "wb")
-        self._f.write(MAGIC)
+        self._write(MAGIC)
         self._index: Dict[str, Any] = {"groups": {}, "datasets": {}, "attrs": {}}
         self._closed = False
+
+    def _write(self, payload) -> None:
+        self._f.write(payload)
+        if self._sink is not None:
+            self._sink.write(payload)
 
     # ------------------------------------------------------------------ #
 
@@ -115,7 +133,15 @@ class CHK5Writer:
         except (TypeError, ValueError):
             # non-buffer dtypes (ml_dtypes bf16/fp8) fall back to a copy
             payload = arr.tobytes()
-        self._f.write(payload)
+        region = self._sink is not None and \
+            self.region_keys.get(name.strip("/"))
+        if region:
+            self._sink.begin_region(region)
+        elif self._sink is not None:
+            self._sink.cut()
+        self._write(payload)
+        if region:
+            self._sink.end_region()
         parts = name.strip("/").split("/")
         for i in range(1, len(parts)):
             self._index["groups"].setdefault("/".join(parts[:i]), {})
@@ -131,7 +157,9 @@ class CHK5Writer:
     def write_bytes(self, name: str, payload: bytes,
                     attrs: Optional[Dict[str, Any]] = None) -> None:
         off = self._f.tell()
-        self._f.write(payload)
+        if self._sink is not None:
+            self._sink.cut()
+        self._write(payload)
         self._index["datasets"][name.strip("/")] = {
             "offset": off,
             "nbytes": len(payload),
@@ -145,15 +173,19 @@ class CHK5Writer:
         if self._closed:
             return
         idx = msgpack.packb(self._index, use_bin_type=True)
-        self._f.write(idx)
-        self._f.write(struct.pack("<Q", len(idx)))
-        self._f.write(struct.pack("<I", zlib.crc32(idx) & 0xFFFFFFFF))
-        self._f.write(TAIL)
+        self._write(idx)
+        self._write(struct.pack("<Q", len(idx)))
+        self._write(struct.pack("<I", zlib.crc32(idx) & 0xFFFFFFFF))
+        self._write(TAIL)
         self._f.flush()
         if self._fsync:
             os.fsync(self._f.fileno())
         self._f.close()
         self._closed = True
+        if self._sink is not None:
+            # the file is complete: freeze the stream's chunk metadata
+            # (uploads keep draining; Place/Commit collect and join them)
+            self._sink.finish()
 
     def __enter__(self):
         return self

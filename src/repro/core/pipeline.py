@@ -90,7 +90,11 @@ class StorageConfig:
     # --- object-store L4 (repro.objstore) ---------------------------- #
     objstore: bool = True                      # compose ObjectStoreTier at L4
     objstore_url: Optional[str] = None         # None → file:<root>/objstore
-    objstore_chunk_bytes: int = 1 << 20        # content-addressed chunk size
+    objstore_chunk_bytes: int = 1 << 20        # fixed-mode chunk size
+    objstore_chunking: str = "cdc"             # "cdc" | "fixed"
+    objstore_cdc_min_bytes: int = 256 << 10    # CDC lower cut bound
+    objstore_cdc_avg_bytes: int = 1 << 20      # CDC target average
+    objstore_cdc_max_bytes: int = 4 << 20      # CDC forced-cut bound
     objstore_transfers: int = 4                # parallel upload threads
     objstore_keep_last: Optional[int] = None   # retention: newest N entries
     objstore_keep_every: Optional[int] = None  # retention: pin id % K == 0
@@ -174,6 +178,10 @@ class Plan:
     specs: Optional[Dict[str, Optional[Protect]]] = None  # clause specs
     dirty_ratio: Optional[float] = None
     promoted_full: bool = False
+    #: dataset name → layout-reuse key for the fused Pack → chunk-stream
+    #: path (device-digest-derived; set by finish() once digests are
+    #: current, consumed by CHK5Writer.region_keys)
+    reuse_keys: Optional[Dict[str, str]] = None
     t0: float = field(default_factory=time.time)
     plan_seconds: float = 0.0          # time spent in plan() itself
     digest_epoch: int = -1             # DIFF only: chain epoch at plan time
@@ -397,13 +405,22 @@ class CheckpointPipeline:
         (parallel writers; D2H completes per shard, overlapped against
         packing of already-arrived ones) and the shard index into the main
         container — everything inside the same ``.tmp`` staging dir, so
-        the whole multi-file set commits atomically."""
+        the whole multi-file set commits atomically.
+
+        When a tier offers Pack-stage chunk sinks (``tier.pack_sink``,
+        the objstore L4), every container byte is teed into a streaming
+        chunker as it is produced — chunk digesting and the missing-chunk
+        uploads overlap serialization, and Place never re-reads the
+        staged files (the zero-stall store path)."""
         d = mf.begin(plan.root, plan.ckpt_id)
         path = os.path.join(d, f"rank{self.comm.rank}.chk5")
         attrs = dict(plan.attrs, level=plan.level, rank=self.comm.rank,
                      world=self.comm.world)
         shard_files: List[str] = []
-        with CHK5Writer(path) as w:
+        sink = self._pack_sink(plan, os.path.basename(path))
+        with CHK5Writer(path, sink=sink) as w:
+            if plan.reuse_keys:
+                w.region_keys = dict(plan.reuse_keys)
             root_attrs = dict(attrs, kind=plan.kind)
             if plan.sharded:
                 root_attrs["sharded"] = True
@@ -412,7 +429,8 @@ class CheckpointPipeline:
                 shard_files = write_shard_files(
                     d, f"rank{self.comm.rank}", w, plan.sharded, plan.specs,
                     default_kind=CHK_FULL,
-                    max_writers=self.cfg.shard_writers)
+                    max_writers=self.cfg.shard_writers,
+                    sink_factory=lambda bn: self._pack_sink(plan, bn))
             if plan.named_host:
                 pack_named(w, plan.named_host, plan.specs, self.pack_tiers)
             if plan.deltas:
@@ -421,6 +439,16 @@ class CheckpointPipeline:
             os.path.getsize(p) for p in shard_files)
         return Packed(stage_dir=d, path=path, nbytes=nbytes,
                       shard_files=shard_files)
+
+    def _pack_sink(self, plan: Plan, basename: str):
+        """First streaming chunk sink any tier of this plan's stack offers
+        for the staged file ``basename`` (None → the tier consumes whole
+        staged files and Place falls back to re-reading them)."""
+        for tier in plan.tiers:
+            s = tier.pack_sink(plan.ckpt_id, basename)
+            if s is not None:
+                return s
+        return None
 
     def _serialize_deltas(self, w: CHK5Writer, deltas: List[LeafDelta],
                           specs: Optional[Dict[str, Optional[Protect]]]
@@ -502,6 +530,27 @@ class CheckpointPipeline:
             paths += [d.path for d in plan.deltas]
         return paths or plan.extra.get("parts", [])
 
+    def _compute_reuse_keys(self, plan: Plan) -> None:
+        """Derive chunk-layout reuse keys for FULL leaves from the *device*
+        digests the diff engine already computed (blockhash at HBM
+        bandwidth) — a leaf whose digests and encoding spec are unchanged
+        since the last store produces byte-identical container regions, so
+        the chunk stream replays its recorded cut layout verbatim and the
+        CDC scan is skipped for those bytes.  The key folds in the Protect
+        spec because clause changes (compression, precision) alter the
+        encoded bytes while the device digests stay equal.  Correctness
+        never depends on a key: chunk digests are always computed from the
+        actual bytes — a wrong key only costs cut-placement quality."""
+        if not plan.named_host:
+            return
+        specs = plan.specs or {}
+        keys: Dict[str, str] = {}
+        for path in plan.named_host:
+            dk = self.diff.digest_key(path)
+            if dk:
+                keys[f"data/{path}"] = f"{path}|{specs.get(path)!r}|{dk}"
+        plan.reuse_keys = keys or None
+
     def finish(self, plan: Plan) -> StoreReport:
         """The asynchronous tail: Pack → Place → Commit.
 
@@ -528,6 +577,7 @@ class CheckpointPipeline:
                     f"DIFF store {plan.ckpt_id}: digest base invalidated by "
                     "a failed store planned before it; retry (it will "
                     "promote to FULL)")
+            self._compute_reuse_keys(plan)
             packed = self.pack(plan)
             self.place(plan, packed)
             return self.commit(plan, packed)

@@ -229,7 +229,8 @@ def write_shard_files(stage_dir: str, prefix: str, index_writer: CHK5Writer,
                       sharded: Dict[str, ShardSnapshot],
                       specs: Optional[Dict[str, Any]] = None,
                       default_kind: str = "FULL",
-                      max_writers: int = 4) -> List[str]:
+                      max_writers: int = 4,
+                      sink_factory=None) -> List[str]:
     """Write every owned chunk as a ``shard-<k>`` sub-dataset spread over
     ``<prefix>.shard<j>.chk5`` files in ``stage_dir`` — one writer thread
     per file, running in parallel — and record each leaf's shard index in
@@ -254,6 +255,11 @@ def write_shard_files(stage_dir: str, prefix: str, index_writer: CHK5Writer,
     dequantized crc32 recorded for the load-side verify; a chunk whose
     roundtrip error exceeds ``max_error`` falls back to raw on its own
     (``codec_fallback`` attr).
+
+    ``sink_factory(basename)`` (optional) supplies a streaming chunk sink
+    per shard file (the fused Pack → upload path): sinks are created here
+    on the caller's thread — registration mutates tier state — and each
+    writer thread only feeds its own sink through ``CHK5Writer``.
     """
     from repro.core.tiers import clause_attrs, int8_encode_array
     specs = specs or {}
@@ -277,12 +283,14 @@ def write_shard_files(stage_dir: str, prefix: str, index_writer: CHK5Writer,
              for j in range(n_files)]
     assignment: Dict[Tuple[str, int], int] = {
         (name, k): i % n_files for i, (name, k, *_rest) in enumerate(work)}
+    sinks = [sink_factory(os.path.basename(p)) if sink_factory else None
+             for p in paths]
 
     def write_one(j: int) -> None:
         # durability is batched below: all shard files fsync back-to-back
         # after every writer finished (one journal settle, not one per
         # file — per-file fsync made a 4-file set pay ~4 journal commits)
-        with CHK5Writer(paths[j], fsync=False) as w:
+        with CHK5Writer(paths[j], fsync=False, sink=sinks[j]) as w:
             w.set_attrs("", {"shard_file": True,
                              "of": f"{prefix}.chk5"})
             for i, (name, k, chunk, cast, spec, codec) in enumerate(work):

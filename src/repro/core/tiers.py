@@ -171,6 +171,16 @@ class Tier(abc.ABC):
         """Where payloads (and the manifest) for this tier land."""
         return self.ctx.local_root
 
+    def pack_sink(self, ckpt_id: int, basename: str):
+        """Pack-stage streaming hook: return a byte sink (an object with
+        ``write``/``cut``/``begin_region``/``end_region``/``finish``, see
+        ``repro.objstore.chunks.ChunkStream``) for the staged file
+        ``basename`` of checkpoint ``ckpt_id``, or None when this tier
+        consumes whole staged files.  A CHK5 writer tees every written
+        byte into the sink, so a sink tier overlaps its transfers with
+        packing instead of re-reading the file at Place."""
+        return None
+
     def place(self, ckpt_id: int, stage_dir: str, payload_path: str,
               extra_files: Sequence[str] = ()) -> None:
         """Write-side: apply this tier's scheme to the packed payload.

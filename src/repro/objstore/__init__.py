@@ -3,7 +3,13 @@ client abstraction, chunk-level dedup uploads, a CAS-guarded checkpoint
 catalog, crash-safe retention GC, and the ``ObjectStoreTier`` that
 composes them into the checkpoint pipeline's level-4 stack."""
 from repro.objstore.catalog import Catalog, CatalogConflictError
-from repro.objstore.chunks import ChunkUploader, FileEntry, chunk_key
+from repro.objstore.cdc import CDCParams, Chunker
+from repro.objstore.chunks import (
+    ChunkStream,
+    ChunkUploader,
+    FileEntry,
+    chunk_key,
+)
 from repro.objstore.client import (
     LocalFSObjectStore,
     MemoryObjectStore,
@@ -15,8 +21,9 @@ from repro.objstore.client import (
 from repro.objstore.gc import collect, retention_split
 
 __all__ = [
-    "Catalog", "CatalogConflictError", "ChunkUploader", "FileEntry",
-    "LocalFSObjectStore", "MemoryObjectStore", "ObjectStore",
-    "ObjectStoreError", "PreconditionFailed", "chunk_key", "collect",
-    "make_object_store", "retention_split",
+    "CDCParams", "Catalog", "CatalogConflictError", "ChunkStream",
+    "ChunkUploader", "Chunker", "FileEntry", "LocalFSObjectStore",
+    "MemoryObjectStore", "ObjectStore", "ObjectStoreError",
+    "PreconditionFailed", "chunk_key", "collect", "make_object_store",
+    "retention_split",
 ]

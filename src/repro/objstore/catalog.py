@@ -72,10 +72,12 @@ class Catalog:
 
     @staticmethod
     def entry_chunks(entry: Dict[str, Any]) -> List[str]:
-        """Every chunk digest an entry references."""
+        """Every chunk digest an entry references.  Rows are
+        ``[digest, offset, nbytes]`` (CDC entries) or the legacy
+        ``[digest, nbytes]`` — the digest leads in both."""
         out = []
         for d in entry.get("files", {}).values():
-            out.extend(h for h, _n in d.get("chunks", []))
+            out.extend(row[0] for row in d.get("chunks", []))
         return out
 
     # -- CAS writes ----------------------------------------------------- #

@@ -45,6 +45,7 @@ from repro.core.formats import CHK5CorruptionError, CHK5Reader
 from repro.core.tiers import Tier, TierContext
 from repro.objstore import gc as objgc
 from repro.objstore.catalog import Catalog
+from repro.objstore.cdc import CDCParams
 from repro.objstore.chunks import ChunkUploader, PendingFile, fetch_file
 from repro.objstore.client import ObjectStoreError, make_object_store
 
@@ -55,15 +56,18 @@ def default_objstore_url(root: str) -> str:
 
 def _cache_matches(path: str, entry) -> bool:
     """Is the cached file byte-identical to the catalog entry?  Verified
-    by re-chunking with the entry's recorded chunk sizes and comparing
-    digests — size alone would silently reuse a stale cache (e.g. a
-    checkpoint id re-stored after its old entry was retired) or keep
-    returning a corrupt file instead of refetching the healthy bucket."""
+    by re-chunking at the entry's recorded (offset, nbytes) ranges and
+    comparing digests — size alone would silently reuse a stale cache
+    (e.g. a checkpoint id re-stored after its old entry was retired) or
+    keep returning a corrupt file instead of refetching the healthy
+    bucket.  Offsets make this layout-independent: fixed and CDC entries
+    verify identically."""
     try:
         if os.path.getsize(path) != entry.size:
             return False
         with open(path, "rb") as f:
-            for digest, nbytes in entry.chunks:
+            for digest, offset, nbytes in entry.chunks:
+                f.seek(offset)
                 data = f.read(nbytes)
                 if len(data) != nbytes or \
                         hashlib.sha256(data).hexdigest() != digest:
@@ -86,13 +90,22 @@ class ObjectStoreTier(Tier):
             default_objstore_url(cfg.root)
         self.store = make_object_store(url)
         self.catalog = Catalog(self.store)
+        cdc = None
+        if getattr(cfg, "objstore_chunking", "cdc") == "cdc":
+            cdc = CDCParams(
+                min_bytes=getattr(cfg, "objstore_cdc_min_bytes", 256 << 10),
+                avg_bytes=getattr(cfg, "objstore_cdc_avg_bytes", 1 << 20),
+                max_bytes=getattr(cfg, "objstore_cdc_max_bytes", 4 << 20))
         self.uploader = ChunkUploader(
             self.store,
             chunk_bytes=getattr(cfg, "objstore_chunk_bytes", 1 << 20),
-            transfers=getattr(cfg, "objstore_transfers", 4))
+            transfers=getattr(cfg, "objstore_transfers", 4),
+            cdc=cdc)
         self.keep_last = getattr(cfg, "objstore_keep_last", None)
         self.keep_every = getattr(cfg, "objstore_keep_every", None)
         self._pending: Dict[int, List[PendingFile]] = {}
+        #: ckpt_id → basename → in-flight ChunkStream (the fused Pack path)
+        self._streams: Dict[int, Dict[str, object]] = {}
         self.stats: Dict[str, int] = {"stores": 0, "restores": 0,
                                       "gc_deleted": 0}
         # payload reads from the cache go through this tier's digest
@@ -109,16 +122,42 @@ class ObjectStoreTier(Tier):
 
     # -- write side ----------------------------------------------------- #
 
+    def pack_sink(self, ckpt_id: int, basename: str):
+        """Hand Pack a streaming chunk sink for the staged file
+        ``basename``: CHK5 writers tee every byte into it, so chunking,
+        digesting and the missing-chunk uploads all overlap container
+        writing — Place then only *collects* the streams instead of
+        re-reading staged files from disk.
+
+        Stores are serialized per pipeline, so a registration for a new
+        checkpoint id drops any stale stream set (a store whose tail
+        failed between pack and commit)."""
+        if ckpt_id not in self._streams:
+            self._streams = {ckpt_id: {}}
+        stream = self.uploader.open_stream(basename)
+        self._streams[ckpt_id][basename] = stream
+        return stream
+
     def place(self, ckpt_id, stage_dir, payload_path, extra_files=()):
-        """Start the chunked uploads (dedup'd, parallel); commit joins.
+        """Collect the Pack-time chunk streams (uploads already in
+        flight); fall back to reading + chunking the staged file for any
+        payload Pack did not stream (e.g. externally produced files
+        entering at Place).  Commit joins.
 
         Stores are serialized per pipeline (the CP queue), so only one
         upload set is ever in flight: dropping any stale pending entry
         here frees the file handles of a store whose tail failed between
         Place and the commit hook."""
-        self._pending = {ckpt_id: [
-            self.uploader.submit_file(p)
-            for p in (payload_path, *extra_files)]}
+        streams = self._streams.pop(ckpt_id, {})
+        self._streams = {}
+        pend = []
+        for p in (payload_path, *extra_files):
+            s = streams.get(os.path.basename(p))
+            if s is not None and s.finished:
+                pend.append(s.pending())
+            else:
+                pend.append(self.uploader.submit_file(p))
+        self._pending = {ckpt_id: pend}
 
     def commit(self, ckpt_id: int, manifest: Dict) -> None:
         """After the local atomic rename: join uploads, publish the

@@ -142,7 +142,8 @@ def test_chunk_dedup_across_files(tmp_path):
     # the 4 shared 1 KiB chunks dedup; only b's tail uploads
     assert up.stats["chunks_deduped"] == 4
     assert up.stats["chunks_uploaded"] == 6
-    assert [h for h, _ in ea.chunks[:4]] == [h for h, _ in eb.chunks[:4]]
+    assert [h for h, _o, _n in ea.chunks[:4]] == \
+        [h for h, _o, _n in eb.chunks[:4]]
     # reassembly verifies digests
     fetch_file(st, ea, str(tmp_path / "a.back"))
     assert open(str(tmp_path / "a.back"), "rb").read() == shared + b"tail-a"
@@ -365,14 +366,23 @@ def _wipe_dirs(tmp_path, *engines):
 
 
 def test_l4_store_publishes_catalog_and_dedups_second_store(tmp_path):
-    # chunk smaller than the payload so unchanged regions can dedup
-    eng = _engine(tmp_path, objstore_chunk_bytes=1024)
+    # chunks smaller than the payload so unchanged regions can dedup
+    # (CDC bounds scaled down to the test's ~16 KiB container); random w
+    # so no two chunks within one store share bytes — the uploader dedups
+    # repeated chunks in-flight, which would deflate up1 on np.full data
+    eng = _engine(tmp_path, objstore_chunk_bytes=1024,
+                  objstore_cdc_min_bytes=256,
+                  objstore_cdc_avg_bytes=1024,
+                  objstore_cdc_max_bytes=4096)
     tier = eng.objstore_tier()
-    eng.store(_state(1.0), ckpt_id=1, level=4)
+    rng = np.random.default_rng(0)
+    st1 = {"w": rng.normal(size=4096).astype(np.float32),
+           "step": np.int32(1)}
+    eng.store(st1, ckpt_id=1, level=4)
     assert tier.catalog.ids() == [1]
     up1 = tier.uploader.stats["bytes_uploaded"]
     assert up1 > 0
-    st2 = _state(1.0)
+    st2 = {"w": st1["w"].copy(), "step": np.int32(1)}
     st2["w"][:8] = -5.0                          # small delta
     eng.store(st2, ckpt_id=2, level=4)
     up2 = tier.uploader.stats["bytes_uploaded"] - up1
@@ -535,6 +545,11 @@ def test_chkls_lists_catalog_entries_json(tmp_path):
     assert e["kind"] == "FULL" and e["level"] == 4
     assert "rank0.chk5" in e["files"]
     assert e["n_chunks"] >= 1 and inv["stored_chunks"] >= 1
+    # per-entry chunk-size histogram (power-of-two buckets) + per-file
+    # chunking mode ride the inventory
+    assert sum(e["chunk_hist"].values()) == e["n_chunks"]
+    assert e["chunk_bytes_max"] >= e["chunk_bytes_min"] > 0
+    assert all(f["mode"] == "cdc" for f in e["files"].values())
     # human-readable mode also runs
     with contextlib.redirect_stdout(io.StringIO()):
         assert chkls_main([root]) == 0
@@ -545,3 +560,87 @@ def test_chkls_lists_catalog_entries_json(tmp_path):
     with _ctxlib.redirect_stderr(err):
         assert chkls_main([str(tmp_path / "shared")]) == 2
     assert "not an object-store root" in err.getvalue()
+
+
+# ------------------------------------------------------------------ #
+# the fused (zero-stall) store path: CDC streaming + digest reuse
+# ------------------------------------------------------------------ #
+
+
+def test_store_streams_chunks_and_reuses_layout_for_clean_leaves(tmp_path):
+    # first store records each FULL leaf's chunk layout under its
+    # device-digest key; a second store of identical bytes replays the
+    # layout (no CDC scan) and every chunk dedups
+    eng = _engine(tmp_path)
+    tier = eng.objstore_tier()
+    eng.store(_state(1.0), ckpt_id=1, level=4)
+    s1 = dict(tier.uploader.stats)
+    assert s1["chunks_uploaded"] > 0
+    eng.store(_state(1.0), ckpt_id=2, level=4)   # identical leaf bytes
+    s2 = tier.uploader.stats
+    assert s2["regions_reused"] > s1["regions_reused"]
+    assert s2["bytes_scan_skipped"] > s1["bytes_scan_skipped"]
+    assert tier.catalog.ids() == [1, 2]
+
+
+def test_boundary_shift_reuploads_only_the_neighborhood(tmp_path):
+    # insert 1 KiB in the middle of a 2 MiB leaf: a fixed-size chunker
+    # would re-upload every chunk past the insertion point (~1 MiB); CDC
+    # boundaries re-synchronize within a few chunks
+    eng = _engine(tmp_path, objstore_chunk_bytes=4096,
+                  objstore_cdc_min_bytes=1024,
+                  objstore_cdc_avg_bytes=4096,
+                  objstore_cdc_max_bytes=16384)
+    tier = eng.objstore_tier()
+    rng = np.random.default_rng(0)
+    base = rng.integers(0, 256, 2 << 20, dtype=np.uint8)
+    at = len(base) // 2
+    eng.store({"blob": base}, ckpt_id=1, level=4)
+    up1 = tier.uploader.stats["bytes_uploaded"]
+    shifted = np.concatenate(
+        [base[:at], rng.integers(0, 256, 1024, dtype=np.uint8), base[at:]])
+    eng.store({"blob": shifted}, ckpt_id=2, level=4)
+    delta = tier.uploader.stats["bytes_uploaded"] - up1
+    tail = len(base) - at                        # what fixed-size re-ships
+    assert delta < 0.30 * tail, (delta, tail)
+    # both stores restore bit-exact from the bucket alone
+    _wipe_dirs(tmp_path, eng)
+    eng2 = _engine(tmp_path, tag="fresh")
+    named, meta = eng2.load_latest()
+    assert meta["id"] == 2
+    np.testing.assert_array_equal(named["blob"], shifted)
+
+
+def test_objstore_chunking_config_plumbs_through(tmp_path):
+    # CDC bounds reach the uploader and the chunking mode is recorded in
+    # the catalog entry
+    eng = _engine(tmp_path, objstore_cdc_min_bytes=512,
+                  objstore_cdc_avg_bytes=2048,
+                  objstore_cdc_max_bytes=8192)
+    tier = eng.objstore_tier()
+    assert (tier.uploader.cdc.min_bytes, tier.uploader.cdc.avg_bytes,
+            tier.uploader.cdc.max_bytes) == (512, 2048, 8192)
+    eng.store(_state(1.0), ckpt_id=1, level=4)
+    entry = tier.catalog.entry(1)
+    assert all(f["mode"] == "cdc" for f in entry["files"].values())
+    # "fixed" opts back into the legacy layout end to end
+    engf = _engine(tmp_path / "fixed", tag="f", objstore_chunking="fixed")
+    tierf = engf.objstore_tier()
+    assert tierf.uploader.cdc is None
+    engf.store(_state(2.0), ckpt_id=1, level=4)
+    entryf = tierf.catalog.entry(1)
+    assert all(f["mode"] == "fixed" for f in entryf["files"].values())
+    named, _ = engf.load_latest()
+    np.testing.assert_array_equal(named["w"], _state(2.0)["w"])
+
+
+def test_checkpoint_config_maps_cdc_fields(tmp_path):
+    cfg = CheckpointConfig(dir=str(tmp_path), objstore_chunking="fixed",
+                           objstore_cdc_avg_bytes=123 << 10,
+                           objstore_cdc_min_bytes=12 << 10,
+                           objstore_cdc_max_bytes=1234 << 10)
+    sc = cfg.storage()
+    assert sc.objstore_chunking == "fixed"
+    assert sc.objstore_cdc_min_bytes == 12 << 10
+    assert sc.objstore_cdc_avg_bytes == 123 << 10
+    assert sc.objstore_cdc_max_bytes == 1234 << 10
