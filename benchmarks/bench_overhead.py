@@ -174,6 +174,48 @@ def objstore_shift_dedup() -> Dict[str, float]:
     return {"objstore_shift_dedup_vs_fixed": cdc_delta / max(fixed_delta, 1)}
 
 
+def serve_swap_delta() -> Dict[str, float]:
+    """Checkpoint-as-deployment datapoint (deterministic, byte-level — no
+    timing): publish a FULL checkpoint, publish a fine-tuned successor
+    (small param delta), then pull the successor into a replica whose
+    chunk cache already holds the first — exactly what a rolling hot-swap
+    (``repro.serve.deploy``) does between consecutive deploys.
+    ``serve_swap_delta_ratio`` = fetched / (fetched + cached) bytes of
+    the second pull; content addressing makes it ~the dedup ratio of the
+    underlying store, hard-gated at 0.30 in check_overhead_regression.py
+    alongside the catalog-level prediction (``CatalogView.diff``)."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core.context import CheckpointConfig, CheckpointContext
+    from repro.objstore.client import make_object_store
+    from repro.objstore.inspect import CatalogView
+    from repro.serve.deploy import EntryPuller
+
+    n = 1 << 23                      # 32 MiB of f32 payload
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=n).astype(np.float32)
+    d = "/tmp/bo-serve-swap"
+    shutil.rmtree(d, ignore_errors=True)
+    ctx = CheckpointContext(CheckpointConfig(
+        dir=d, backend="fti", dedicated_thread=False))
+    ctx.store({"params": {"w": jnp.asarray(base)}}, id=1, level=4)
+    tuned = base.copy()
+    tuned[:4096] += 1.0              # a small fine-tune delta
+    ctx.store({"params": {"w": jnp.asarray(tuned)}}, id=2, level=4)
+    ctx.shutdown()
+
+    store = make_object_store("file:" + os.path.join(d, "objstore"))
+    view = CatalogView.from_store(store)
+    puller = EntryPuller(store, os.path.join(d, "replica-cache"))
+    puller.pull(view.entry(1))       # the replica deployed v1 earlier
+    got = puller.pull(view.entry(2))
+    fetched, cached = got["bytes_fetched"], got["bytes_cached"]
+    predicted = CatalogView.diff(view.entry(1), view.entry(2)).ratio
+    shutil.rmtree(d, ignore_errors=True)
+    return {"serve_swap_delta_ratio": fetched / max(fetched + cached, 1),
+            "serve_swap_delta_predicted": predicted}
+
+
 _SHARDED_SCRIPT = textwrap.dedent("""
     import os, sys, json, time, shutil
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
@@ -265,6 +307,7 @@ def run(repeats: int = 3) -> Dict[str, float]:
     out.update(sharded_store(repeats=repeats))
     out.update(objstore_store(repeats=repeats))
     out.update(objstore_shift_dedup())
+    out.update(serve_swap_delta())
     return out
 
 

@@ -25,6 +25,11 @@ And the objstore datapoints:
   after a 1 KiB mid-payload insert; hard-gated at 0.30 (byte-
   deterministic: content-defined cuts must re-synchronize where fixed
   offsets shift everything).
+- ``serve_swap_delta_ratio`` / ``serve_swap_delta_predicted`` — the
+  bytes a warm serving replica pulls to hot-swap to a fine-tune
+  successor (measured through ``EntryPuller``) and the catalog-level
+  ``CatalogView.diff`` prediction; both hard-gated at 0.30 (byte-
+  deterministic — a deploy is a chunk delta, never a full re-download).
 - ``objstore_goodput_bps`` — payload bytes over first-store wall time on
   the fused Pack → chunk-stream path.  Must be present (the fused path
   is this repo's zero-stall claim) and must not fall below the committed
@@ -70,6 +75,12 @@ OBJSTORE_DEDUP_CEILING = 0.30
 # CDC must beat a fixed-size chunker by >3x on the boundary-shift store
 # (byte-deterministic: same payloads, same seeded insert every run)
 SHIFT_DEDUP_CEILING = 0.30
+# a rolling hot-swap deploy (serve_swap_delta) must pull <30% of the
+# full weight bytes when moving a warm replica to a fine-tune successor —
+# byte-deterministic like the dedup gates: above the ceiling, either the
+# replica ChunkCache stopped hitting or the catalog delta grew (chunk
+# layout unstable between publishes)
+SERVE_SWAP_DELTA_CEILING = 0.30
 # the veloc overhead ratio runs at/under parity with the fused streaming
 # store path; it gets a hard parity ceiling instead of the generic noise
 # floor — the committed baseline itself must sit at <= 1.0
@@ -170,6 +181,16 @@ def main(argv=None) -> int:
         failures.append(f"objstore_shift_dedup_vs_fixed: {shift:.3f} > "
                         f"{SHIFT_DEDUP_CEILING} (content-defined chunking "
                         f"not re-syncing after a boundary shift)")
+
+    # serve hot-swap datapoint: hard delta ceiling (byte-deterministic) —
+    # both the measured pull and the catalog-level prediction must agree
+    # that a fine-tune deploy moves only the changed chunks
+    for key in ("serve_swap_delta_ratio", "serve_swap_delta_predicted"):
+        swp = res.get(key)
+        if swp is not None and swp > SERVE_SWAP_DELTA_CEILING:
+            failures.append(f"{key}: {swp:.3f} > "
+                            f"{SERVE_SWAP_DELTA_CEILING} (hot-swap deploy "
+                            f"no longer chunk-delta — pulling full weights)")
 
     # goodput datapoint: the fused Pack → upload path must exist and must
     # not fall more than the noise threshold below the baseline

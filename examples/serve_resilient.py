@@ -11,7 +11,7 @@ import jax.numpy as jnp
 from repro.configs import get_arch
 from repro.core.context import CheckpointConfig, CheckpointContext
 from repro.models.zoo import build_model
-from repro.serve.engine import ServingEngine
+from repro.serve.engine import ServingEngine, WeightsHandle
 
 CKPT = "/tmp/openchk-serve-example"
 
@@ -24,8 +24,11 @@ def main():
     prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
                                  cfg.vocab_size, jnp.int32)
 
-    # server #1: prefill, generate 10 tokens, checkpoint, "crash"
-    eng = ServingEngine(model, params, batch=2, max_len=64)
+    # server #1: prefill, generate 10 tokens, checkpoint, "crash".
+    # Weights are an explicit epoch-tagged handle — set_weights is the
+    # only mutation path (the deploy subscriber swaps through it too)
+    eng = ServingEngine(model, WeightsHandle(params=params), batch=2,
+                        max_len=64)
     eng.prefill(prompts)
     first = eng.generate(10)
     ctx = CheckpointContext(CheckpointConfig(dir=CKPT))
@@ -34,8 +37,12 @@ def main():
     ctx.shutdown()
     print(f"server 1 generated: {first[0].tolist()} … crash!")
 
-    # server #2: fresh process — restore, NO prefill, continue
-    eng2 = ServingEngine(model, params, batch=2, max_len=64)
+    # server #2: fresh process — restore, NO prefill, continue.  The
+    # weights arrive via the one mutation path: an atomic handle swap
+    eng2 = ServingEngine(model, model.init(jax.random.PRNGKey(9)),
+                         batch=2, max_len=64)
+    swapped = eng2.set_weights(WeightsHandle(params=params))
+    assert eng2.weights.epoch == swapped.epoch > 0
     template = eng2.model  # engine state template comes from a cold cache
     cold = type(eng.get_state())(
         caches=model.init_caches(2, 64),

@@ -740,6 +740,61 @@ class ElasticLoader:
             r.close()
 
 
+def load_named_onto(container: str, dirs: Sequence[str], rank: int = 0,
+                    shardings: Any = None) -> Dict[str, Any]:
+    """Load every leaf of a committed rank container **directly onto a
+    target mesh** — the serve-side region loader.
+
+    Sharded leaves (``shardidx/``) resolve their chunk files across
+    ``dirs`` and assemble straight onto the requested sharding via
+    :func:`assemble_onto` (one region read per distinct target index —
+    the global array never exists on host), so a checkpoint stored from
+    a 4×4 training mesh lands on a 1×8 serving mesh without either mesh
+    seeing the full tree.  Plain ``data/`` leaves decode through the
+    tier codec dispatch (int8 etc.) and are device_put per the same
+    sharding map.
+
+    ``shardings`` is a mapping ``name → jax sharding`` (missing names
+    assemble to host numpy), a single sharding applied to every leaf, or
+    ``None`` for an all-host load.  Raises :class:`CHK5CorruptionError`
+    when the shard set is incomplete — a torn load must fail loudly, the
+    deploy path never installs a partial tree."""
+    from repro.core.tiers import decode_leaf   # tiers ⇄ resharding layering
+
+    def sharding_for(name: str):
+        if shardings is None:
+            return None
+        if hasattr(shardings, "get"):
+            return shardings.get(name)
+        return shardings
+
+    named: Dict[str, Any] = {}
+    rd = CHK5Reader(container)
+    try:
+        refs = resolve_shard_refs(rd, dirs, rank)
+        if refs is None:
+            raise CHK5CorruptionError(
+                f"{container}: incomplete shard set across {list(dirs)} — "
+                f"refusing a partial load")
+        for name, ref in refs.items():
+            sh = sharding_for(name)
+            named[name] = assemble_onto(ref, sh) if sh is not None \
+                else ref.materialize()
+        for ds in rd.datasets():
+            if not ds.startswith("data/"):
+                continue
+            name = ds[len("data/"):]
+            arr = decode_leaf(rd, ds)
+            sh = sharding_for(name)
+            if sh is not None:
+                import jax
+                arr = jax.device_put(arr, sh)
+            named[name] = arr
+    finally:
+        rd.close()
+    return named
+
+
 def elastic_restore(ckpt_dir_path: str, new_world: int, new_rank: int
                     ) -> Dict[str, np.ndarray]:
     """Restore this new rank's slice of every sharded array in a committed

@@ -23,6 +23,13 @@ def main() -> int:
     ap.add_argument("--kill-after", type=int, default=None,
                     help="simulate failure after N generated tokens")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--follow-catalog", default=None, metavar="URL",
+                    help="object-store url (file:<dir> / mem:) to follow: "
+                    "newly published FULL checkpoints hot-swap into the "
+                    "engine between batches (checkpoint-as-deployment)")
+    ap.add_argument("--deploy-cache", default=None,
+                    help="node-local chunk/file cache for --follow-catalog "
+                    "pulls (default <ckpt-dir>/deploy-cache)")
     args = ap.parse_args()
 
     import jax
@@ -30,7 +37,7 @@ def main() -> int:
     from repro.configs import get_arch
     from repro.core.context import CheckpointConfig, CheckpointContext
     from repro.models.zoo import build_model
-    from repro.serve.engine import ServingEngine
+    from repro.serve.engine import ServingEngine, WeightsHandle
 
     cfg = get_arch(args.arch)
     if not args.full:
@@ -38,6 +45,19 @@ def main() -> int:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     eng = ServingEngine(model, params, args.batch, args.max_len)
+    eng.swap_hook = lambda old, new: print(
+        f"[serve] weights swapped: epoch {old.epoch} -> {new.epoch} "
+        f"(catalog entry {new.entry_id})")
+
+    deployer = None
+    if args.follow_catalog:
+        from repro.objstore.client import make_object_store
+        from repro.serve.deploy import FleetDeployer, Replica
+        cache = args.deploy_cache or f"{args.ckpt_dir}/deploy-cache"
+        deployer = FleetDeployer(
+            make_object_store(args.follow_catalog),
+            [Replica(name="serve0", engine=eng, cache_root=cache,
+                     prefix="params")])
 
     ckpt = CheckpointContext(CheckpointConfig(dir=args.ckpt_dir,
                                               backend=args.backend))
@@ -57,6 +77,16 @@ def main() -> int:
     done = int(eng.get_state().pos) - args.prompt_len
     out = []
     for i in range(done, args.gen):
+        if deployer is not None:
+            st = deployer.poll()
+            if st["action"] == "started":
+                d = st["delta"]
+                print(f"[serve] deploying catalog entry {st['entry']} "
+                      f"(delta {d.n_chunks_delta}/{d.n_chunks_total} chunks, "
+                      f"{d.bytes_delta}/{d.bytes_total} bytes)")
+            elif st["action"] == "pinned":
+                print(f"[serve] deploy pinned: {st['error']} "
+                      f"(retrying with backoff)")
         out.append(eng.generate(1))
         ckpt.store(eng.get_state(), id=int(eng.get_state().pos), level=1,
                    if_=(i + 1) % 8 == 0)

@@ -5,10 +5,12 @@ composes them into the checkpoint pipeline's level-4 stack."""
 from repro.objstore.catalog import Catalog, CatalogConflictError
 from repro.objstore.cdc import CDCParams, Chunker
 from repro.objstore.chunks import (
+    ChunkCache,
     ChunkStream,
     ChunkUploader,
     FileEntry,
     chunk_key,
+    fetch_file_delta,
 )
 from repro.objstore.client import (
     LocalFSObjectStore,
@@ -19,11 +21,19 @@ from repro.objstore.client import (
     make_object_store,
 )
 from repro.objstore.gc import collect, retention_split
+from repro.objstore.inspect import (
+    CatalogView,
+    ChunkDelta,
+    EntryInfo,
+    FileInfo,
+)
+from repro.objstore.subscriber import CatalogSubscriber, DeploySelector
 
 __all__ = [
-    "CDCParams", "Catalog", "CatalogConflictError", "ChunkStream",
-    "ChunkUploader", "Chunker", "FileEntry", "LocalFSObjectStore",
-    "MemoryObjectStore", "ObjectStore", "ObjectStoreError",
-    "PreconditionFailed", "chunk_key", "collect", "make_object_store",
-    "retention_split",
+    "CDCParams", "Catalog", "CatalogConflictError", "CatalogSubscriber",
+    "CatalogView", "ChunkCache", "ChunkDelta", "ChunkStream",
+    "ChunkUploader", "Chunker", "DeploySelector", "EntryInfo", "FileEntry",
+    "FileInfo", "LocalFSObjectStore", "MemoryObjectStore", "ObjectStore",
+    "ObjectStoreError", "PreconditionFailed", "chunk_key", "collect",
+    "fetch_file_delta", "make_object_store", "retention_split",
 ]

@@ -65,6 +65,19 @@ class Catalog:
     def epoch(self) -> int:
         return int(self.read()[0]["epoch"])
 
+    def read_if_newer(self, last_epoch: int
+                      ) -> Optional[Tuple[Dict[str, Any], int]]:
+        """Epoch watch: one catalog read, ``None`` when nothing was
+        published since ``last_epoch`` — the subscriber's poll primitive.
+        Every catalog mutation bumps the epoch (CAS guard), so a single
+        integer comparison decides "anything new?" without parsing
+        entries.  → ``(catalog dict, epoch)`` only when newer."""
+        cat, _etag = self.read()
+        epoch = int(cat["epoch"])
+        if epoch <= int(last_epoch):
+            return None
+        return cat, epoch
+
     @staticmethod
     def file_entries(entry: Dict[str, Any]) -> Dict[str, FileEntry]:
         return {name: FileEntry.from_json(name, d)

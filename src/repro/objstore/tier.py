@@ -46,7 +46,12 @@ from repro.core.tiers import Tier, TierContext
 from repro.objstore import gc as objgc
 from repro.objstore.catalog import Catalog
 from repro.objstore.cdc import CDCParams
-from repro.objstore.chunks import ChunkUploader, PendingFile, fetch_file
+from repro.objstore.chunks import (
+    ChunkCache,
+    ChunkUploader,
+    PendingFile,
+    fetch_file_delta,
+)
 from repro.objstore.client import ObjectStoreError, make_object_store
 
 
@@ -107,7 +112,8 @@ class ObjectStoreTier(Tier):
         #: ckpt_id → basename → in-flight ChunkStream (the fused Pack path)
         self._streams: Dict[int, Dict[str, object]] = {}
         self.stats: Dict[str, int] = {"stores": 0, "restores": 0,
-                                      "gc_deleted": 0}
+                                      "gc_deleted": 0, "bytes_fetched": 0,
+                                      "bytes_cached": 0}
         # payload reads from the cache go through this tier's digest
         # verification, not the byte-oblivious LocalTier
         ctx.catalog_roots.add(self.root)
@@ -209,13 +215,18 @@ class ObjectStoreTier(Tier):
         d = mf.ckpt_dir(self.root, ckpt_id)
         os.makedirs(d, exist_ok=True)
         try:
+            # chunk-level cache shared across entries: recovering entry
+            # N+1 after N pulls only the chunks the two do not share
+            cache = ChunkCache(os.path.join(self.root, "chunks"))
             mine = [n for n in files
                     if n == container or n.startswith(f"rank{rank}.shard")]
             for name in mine:
                 dest = os.path.join(d, name)
                 if _cache_matches(dest, files[name]):
                     continue             # already materialized, verified
-                fetch_file(self.store, files[name], dest)
+                got = fetch_file_delta(self.store, files[name], dest, cache)
+                self.stats["bytes_fetched"] += got["bytes_fetched"]
+                self.stats["bytes_cached"] += got["bytes_cached"]
         except ObjectStoreError:
             return None
         # the manifest rides the catalog entry; materializing it makes the

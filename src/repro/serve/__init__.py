@@ -1,1 +1,12 @@
-"""serve substrate."""
+"""serve substrate: the batched engine plus the checkpoint-as-deployment
+control plane (catalog subscriber → chunk-delta pull → rolling atomic
+weight swap)."""
+from repro.serve.engine import (
+    ServeState,
+    ServingEngine,
+    WeightsHandle,
+    make_serve_step,
+)
+
+__all__ = ["ServeState", "ServingEngine", "WeightsHandle",
+           "make_serve_step"]

@@ -1,0 +1,286 @@
+"""Checkpoint-as-deployment: rolling chunk-delta hot-swap for a serving
+fleet.
+
+The training run publishes checkpoints into the content-addressed object
+store; a serving fleet *follows the catalog* instead of receiving pushed
+weight files.  :class:`FleetDeployer` composes three pieces:
+
+- the **subscriber** (``repro.objstore.subscriber``): one epoch-integer
+  poll decides "anything new?", the typed
+  :class:`~repro.objstore.inspect.CatalogView` decides "which entry";
+- the **puller** (:class:`EntryPuller`): materializes the entry's rank
+  file set into the replica's node-local ``objstore-cache`` with
+  chunk-level delta fetches — only digests absent from the replica's
+  :class:`~repro.objstore.chunks.ChunkCache` hit the store, every chunk
+  digest-verified (a fine-tune publish ships ~3% of the weight bytes,
+  the CI-gated ``serve_swap_delta_ratio``);
+- the **loader** (:func:`repro.core.resharding.load_named_onto`): the
+  param tree is assembled *directly onto each replica's serving mesh*
+  via shard region reads — a checkpoint stored from a 4×4 training mesh
+  lands on a 1×8 serving mesh with no global host array.
+
+Rolling-swap invariants (the "libraries must become more fault
+tolerant" discipline applied to deployment):
+
+1. **One replica at a time.**  A replica must pull, assemble, flip and
+   report readiness before the next replica starts — a bad publish
+   stops at the canary with the rest of the fleet untouched.
+2. **The flip is atomic and late.**  The new tree is fully assembled
+   and validated *before* ``set_weights`` — a replica never serves a
+   torn tree; in-flight ``generate()`` batches finish on the handle
+   they captured.
+3. **Failure pins, never tears.**  A failed pull (missing chunk, digest
+   mismatch, objstore outage, killed replica) leaves that replica
+   serving its current epoch; the deployer backs off and retries, and
+   the rollout does not advance past the failure.
+
+Failure matrix (exercised in tests/test_serve_deploy.py):
+
+====================  =============================================
+fault                 observable behaviour
+====================  =============================================
+replica dies mid-pull fleet keeps serving the old epoch; the revived
+                      replica re-pulls (cache survives) and converges
+corrupt cached chunk  ChunkCache digest-verify evicts + refetches;
+                      the swap completes with one extra chunk pulled
+objstore outage       subscriber/puller raise ObjectStoreError; the
+                      replica pins its epoch and retries with backoff
+partial shard set     load_named_onto raises — no flip happens
+====================  =============================================
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from repro.core import manifest as mf
+from repro.core.formats import CHK5CorruptionError, CHK5Reader
+from repro.core.protect import flatten_named, unflatten_named
+from repro.core.resharding import load_named_onto
+from repro.objstore.chunks import ChunkCache, fetch_file_delta
+from repro.objstore.client import ObjectStore, ObjectStoreError
+from repro.objstore.inspect import EntryInfo
+from repro.objstore.subscriber import CatalogSubscriber, DeploySelector
+from repro.serve.engine import ServingEngine, WeightsHandle
+
+
+class EntryPuller:
+    """Materializes one catalog entry's rank file set into a node-local
+    cache directory with chunk-delta fetches.
+
+    The chunk cache persists across entries — pulling entry N+1 after N
+    only fetches the digests the two do not share.  Every file lands via
+    staged ``.part`` + rename and every container is CHK5-validated, so
+    a crash mid-pull leaves no half-written file a later pull would
+    trust."""
+
+    def __init__(self, store: ObjectStore, cache_root: str, rank: int = 0):
+        self.store = store
+        self.cache_root = cache_root
+        self.rank = rank
+        self.cache = ChunkCache(os.path.join(cache_root, "chunks"))
+
+    def pull(self, entry: EntryInfo) -> Dict[str, Any]:
+        """Fetch ``entry``'s files for this rank → ``{"dir", "container",
+        "bytes_fetched", "bytes_cached", "chunks_corrupt"}``.  Raises
+        ``ObjectStoreError`` on any missing/corrupt chunk — the caller
+        treats the pull as failed, nothing was installed."""
+        files = entry.rank_files(self.rank)
+        container = f"rank{self.rank}.chk5"
+        if not any(f.name == container for f in files):
+            raise ObjectStoreError(
+                f"entry {entry.id} has no {container} — not deployable "
+                f"for rank {self.rank}")
+        d = mf.ckpt_dir(self.cache_root, entry.id)
+        os.makedirs(d, exist_ok=True)
+        stats = {"dir": d, "container": os.path.join(d, container),
+                 "bytes_fetched": 0, "bytes_cached": 0, "chunks_corrupt": 0}
+        for f in files:
+            got = fetch_file_delta(self.store, f.file_entry(),
+                                   os.path.join(d, f.name), self.cache)
+            for k in ("bytes_fetched", "bytes_cached", "chunks_corrupt"):
+                stats[k] += got[k]
+        # the manifest rides the catalog entry; materializing it makes
+        # the cache dir a normal committed checkpoint dir
+        man_path = os.path.join(d, mf.MANIFEST)
+        tmp = man_path + ".part"
+        with open(tmp, "w") as fh:
+            json.dump(dict(entry.manifest), fh, indent=1, sort_keys=True)
+        os.replace(tmp, man_path)
+        try:
+            CHK5Reader(stats["container"]).close()
+        except (OSError, CHK5CorruptionError) as e:
+            raise ObjectStoreError(
+                f"entry {entry.id}: pulled container failed CHK5 "
+                f"validation: {e}") from e
+        return stats
+
+
+@dataclass
+class Replica:
+    """One serving engine the deployer manages, plus its pull-side state.
+    ``cache_root`` is the replica's node-local objstore-cache (each
+    replica pulls independently — a dead replica never blocks a peer's
+    chunks)."""
+    name: str
+    engine: ServingEngine
+    cache_root: str
+    rank: int = 0
+    prefix: Optional[str] = None      # checkpoint namespace of the params
+    failures: int = 0
+    next_retry_t: float = 0.0
+    last_error: Optional[str] = None
+    _puller: Optional[EntryPuller] = field(default=None, repr=False)
+
+    def puller(self, store: ObjectStore) -> EntryPuller:
+        if self._puller is None:
+            self._puller = EntryPuller(store, self.cache_root, self.rank)
+        return self._puller
+
+
+class FleetDeployer:
+    """Drives the rolling hot-swap of a replica fleet off the catalog.
+
+    ``poll()`` is the whole control loop, designed to be called from a
+    timer/serve loop: it advances the rollout by **at most one replica
+    swap** per call (invariant 1), so readiness between swaps is exactly
+    "the previous poll returned with the replica converged".  Failures
+    never raise out of ``poll()`` — they pin the failing replica
+    (invariant 3), stamp a backoff deadline, and the rollout resumes
+    from that replica on a later poll.  ``time_fn`` is injectable so
+    tests drive backoff deterministically."""
+
+    def __init__(self, store: ObjectStore, replicas: List[Replica],
+                 selector: DeploySelector = DeploySelector(),
+                 backoff_s: float = 1.0, max_backoff_s: float = 30.0,
+                 time_fn=time.monotonic):
+        self.store = store
+        self.replicas = list(replicas)
+        self.subscriber = CatalogSubscriber(store, selector)
+        self.backoff_s = backoff_s
+        self.max_backoff_s = max_backoff_s
+        self.time_fn = time_fn
+        self.target: Optional[EntryInfo] = None
+        self._next = 0                 # rollout cursor into self.replicas
+        self._watch_retry_t = 0.0      # backoff for catalog-poll outages
+        self.stats = {"swaps": 0, "rollouts": 0, "pulls_failed": 0,
+                      "bytes_fetched": 0, "bytes_cached": 0}
+
+    # -- one control-loop step ------------------------------------------ #
+
+    def poll(self) -> Dict[str, Any]:
+        """One deploy step → a status dict: ``action`` is one of
+        ``idle`` / ``watching`` (outage backoff) / ``started`` /
+        ``swapped`` / ``pinned`` (replica failed, epoch kept) /
+        ``waiting`` (backoff not yet elapsed) / ``converged``."""
+        now = self.time_fn()
+        if self.target is None:
+            if now < self._watch_retry_t:
+                return {"action": "watching", "retry_at": self._watch_retry_t}
+            try:
+                target = self.subscriber.poll()
+            except ObjectStoreError as e:
+                # catalog unreachable: the fleet keeps serving what it
+                # serves; watch again after backoff
+                self._watch_retry_t = now + self.backoff_s
+                return {"action": "watching", "error": str(e),
+                        "retry_at": self._watch_retry_t}
+            if target is None:
+                return {"action": "idle", "epoch": self.subscriber.last_epoch}
+            self.target = target
+            self._next = 0
+            self.stats["rollouts"] += 1
+            for r in self.replicas:
+                r.failures = 0
+                r.next_retry_t = 0.0
+            return {"action": "started", "entry": target.id,
+                    "delta": self.subscriber.delta(target)}
+        if self._next >= len(self.replicas):
+            done = self.target
+            self.subscriber.mark_deployed(done)
+            self.target = None
+            return {"action": "converged", "entry": done.id}
+        r = self.replicas[self._next]
+        if now < r.next_retry_t:
+            return {"action": "waiting", "replica": r.name,
+                    "retry_at": r.next_retry_t}
+        try:
+            swap = self._swap_one(r, self.target)
+        except (ObjectStoreError, CHK5CorruptionError, OSError,
+                KeyError) as e:
+            # invariant 3: the replica keeps its current epoch — nothing
+            # was installed — and the rollout holds at this replica
+            r.failures += 1
+            r.last_error = f"{type(e).__name__}: {e}"
+            r.next_retry_t = now + min(
+                self.backoff_s * (2 ** (r.failures - 1)), self.max_backoff_s)
+            self.stats["pulls_failed"] += 1
+            return {"action": "pinned", "replica": r.name,
+                    "epoch": r.engine.weights.epoch,
+                    "error": r.last_error, "retry_at": r.next_retry_t}
+        self._next += 1
+        self.stats["swaps"] += 1
+        r.failures = 0
+        r.last_error = None
+        return dict(swap, action="swapped", replica=r.name,
+                    remaining=len(self.replicas) - self._next)
+
+    def run_until_converged(self, max_polls: int = 10_000,
+                            sleep_fn=None) -> Dict[str, Any]:
+        """Poll until the fleet converges on the current target (tests /
+        one-shot deploys).  Honors backoff via ``sleep_fn`` (defaults to
+        busy-advancing an injectable clock is the caller's job)."""
+        last: Dict[str, Any] = {"action": "idle"}
+        for _ in range(max_polls):
+            last = self.poll()
+            if last["action"] in ("converged", "idle"):
+                return last
+            if last["action"] in ("waiting", "watching", "pinned") \
+                    and sleep_fn is not None:
+                sleep_fn(self.backoff_s)
+        return last
+
+    # -- the swap ------------------------------------------------------- #
+
+    def _swap_one(self, r: Replica, entry: EntryInfo) -> Dict[str, Any]:
+        """Pull + assemble + atomic flip for one replica.  Everything up
+        to ``set_weights`` is side-effect-free for the serving path —
+        any exception leaves the old handle serving."""
+        pulled = r.puller(self.store).pull(entry)
+        self.stats["bytes_fetched"] += pulled["bytes_fetched"]
+        self.stats["bytes_cached"] += pulled["bytes_cached"]
+
+        cur_named, treedef = flatten_named(r.engine.params)
+        prefix = (r.prefix + "/") if r.prefix else ""
+        shardings = {prefix + name: getattr(leaf, "sharding", None)
+                     for name, leaf in cur_named.items()}
+        named = load_named_onto(pulled["container"], [pulled["dir"]],
+                                rank=r.rank, shardings=shardings)
+        # select this engine's namespace; a missing leaf fails the swap
+        # (KeyError → pinned) before any mutation
+        new_named = {}
+        for name in cur_named:
+            key = prefix + name
+            if key not in named:
+                raise KeyError(
+                    f"entry {entry.id} is missing leaf {key!r} — not a "
+                    f"deployable params tree for replica {r.name}")
+            new_named[name] = named[key]
+        new_params = unflatten_named(treedef, new_named, r.engine.params)
+        handle = r.engine.set_weights(WeightsHandle(
+            params=new_params, entry_id=entry.id))
+        return {"entry": entry.id, "epoch": handle.epoch,
+                "bytes_fetched": pulled["bytes_fetched"],
+                "bytes_cached": pulled["bytes_cached"],
+                "chunks_corrupt": pulled["chunks_corrupt"]}
+
+    # -- observability --------------------------------------------------- #
+
+    def fleet_epochs(self) -> Dict[str, Optional[int]]:
+        """replica name → catalog entry id currently served (the torn-
+        fleet check: mid-rollout at most two distinct values, old and
+        new)."""
+        return {r.name: r.engine.weights.entry_id for r in self.replicas}

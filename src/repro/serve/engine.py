@@ -5,9 +5,20 @@ lowers for the ``decode_32k`` / ``long_500k`` cells. The engine's state
 (caches + positions + generated tokens) is a pytree, so OpenCHK can
 checkpoint a *serving* process too — a failed server resumes decoding
 without re-running prefill (examples/serve_resilient.py).
+
+Weights are an explicit :class:`WeightsHandle` — an epoch-tagged,
+provenance-carrying immutable record — not a bare pytree attribute.
+:meth:`ServingEngine.set_weights` is the **only** mutation path, and the
+flip is atomic (one attribute assignment of an immutable handle):
+``generate()`` captures the handle once per batch, so an in-flight batch
+finishes entirely on the weights it started with and the next batch picks
+up the new epoch — the zero-downtime hot-swap contract the deploy
+subscriber (``repro.serve.deploy``) builds on.
 """
 from __future__ import annotations
 
+import threading
+from dataclasses import dataclass, field
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -20,6 +31,19 @@ class ServeState(NamedTuple):
     caches: Any
     pos: jnp.ndarray             # scalar int32 — next write position
     last_token: jnp.ndarray      # (B, 1) int32
+
+
+@dataclass(frozen=True)
+class WeightsHandle:
+    """The weights a serving engine holds, with their provenance: the
+    param pytree plus the deploy epoch that installed it, the catalog
+    entry it came from, and the sharding it was assembled onto.  Frozen —
+    a swap replaces the whole handle, never a leaf inside one, so a
+    reader holding a handle can never observe a torn tree."""
+    params: Any
+    epoch: int = 0                       # monotonic per-engine swap count
+    entry_id: Optional[int] = None       # catalog entry id (None = local)
+    sharding: Any = None                 # serving-mesh sharding (or None)
 
 
 def make_serve_step(model: Model) -> Callable[..., Tuple[jnp.ndarray, Any]]:
@@ -42,22 +66,69 @@ class ServingEngine:
 
     def __init__(self, model: Model, params: Any, batch: int, max_len: int):
         self.model = model
-        self.params = params
+        if not isinstance(params, WeightsHandle):
+            params = WeightsHandle(params=params)
+        self._weights = params
+        self._swap_lock = threading.Lock()
         self.batch = batch
         self.max_len = max_len
         self._step = jax.jit(make_serve_step(model))
         self._decode_warm = jax.jit(model.decode_step)
         self.state: Optional[ServeState] = None
+        #: called as ``swap_hook(old_handle, new_handle)`` after every
+        #: successful set_weights — deploy readiness reporting
+        self.swap_hook: Optional[Callable[[WeightsHandle, WeightsHandle],
+                                          None]] = None
+
+    # --- the weights surface --------------------------------------------- #
+
+    @property
+    def weights(self) -> WeightsHandle:
+        return self._weights
+
+    @property
+    def params(self) -> Any:
+        """The current param pytree (read-only view of the handle —
+        mutation goes through :meth:`set_weights`)."""
+        return self._weights.params
+
+    def set_weights(self, handle: WeightsHandle) -> WeightsHandle:
+        """The only weights mutation path: atomically flip the engine to
+        ``handle``.  A zero/unset epoch is stamped monotonically so every
+        swap is observable.  In-flight ``generate()`` batches captured the
+        old handle and finish on it; the next batch serves the new one."""
+        if not isinstance(handle, WeightsHandle):
+            raise TypeError(
+                f"set_weights takes a WeightsHandle, not "
+                f"{type(handle).__name__} — wrap the pytree: "
+                f"WeightsHandle(params=...)")
+        with self._swap_lock:
+            old = self._weights
+            if handle.epoch <= old.epoch:
+                handle = WeightsHandle(
+                    params=handle.params, epoch=old.epoch + 1,
+                    entry_id=handle.entry_id, sharding=handle.sharding)
+            self._weights = handle       # the atomic flip
+        if self.swap_hook is not None:
+            self.swap_hook(old, handle)
+        return handle
+
+    # --- serving --------------------------------------------------------- #
 
     def prefill(self, prompts: jnp.ndarray) -> None:
         """Sequential prefill through the decode path (cache-exact; fine for
         the small CPU examples — large-scale prefill uses model.forward)."""
         b, s = prompts.shape
+        if s == 0:
+            raise ValueError(
+                "prefill needs at least one prompt token per sequence "
+                f"(got prompt_len=0 for batch {b}) — there are no logits "
+                "to seed decoding from an empty prompt")
+        handle = self._weights          # one capture — swap-consistent
         caches = self.model.init_caches(b, self.max_len)
-        tok = prompts[:, :1]
         for i in range(s):
             logits, caches = self._decode_warm(
-                self.params, prompts[:, i: i + 1], caches, jnp.int32(i))
+                handle.params, prompts[:, i: i + 1], caches, jnp.int32(i))
         nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         self.state = ServeState(caches, jnp.int32(s), nxt)
 
@@ -65,8 +136,13 @@ class ServingEngine:
         assert self.state is not None, "prefill first (or restore a checkpoint)"
         toks = []
         st = self.state
+        # capture the handle once: this batch runs to completion on the
+        # weights it started with, even if set_weights flips mid-loop —
+        # a swap is only ever observable at a batch boundary
+        handle = self._weights
         for _ in range(n_tokens):
-            nxt, caches = self._step(self.params, st.last_token, st.caches, st.pos)
+            nxt, caches = self._step(handle.params, st.last_token,
+                                     st.caches, st.pos)
             st = ServeState(caches, st.pos + 1, nxt)
             toks.append(nxt)
         self.state = st

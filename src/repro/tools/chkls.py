@@ -44,56 +44,13 @@ def _clause_str(name: str, attrs: dict) -> str:
     return " ".join(parts)
 
 
-def _chunk_sizes(fe: dict) -> list:
-    """Per-chunk byte sizes of a catalog file entry.  Rows are
-    ``[digest, offset, nbytes]`` (CDC/streamed) or the legacy
-    ``[digest, nbytes]`` — the size is the last element in both."""
-    return [int(row[-1]) for row in fe.get("chunks", [])]
-
-
-def _chunk_hist(sizes: list) -> dict:
-    """Power-of-two size histogram: bucket label ``2^k`` counts chunks
-    with ``2^(k-1) < nbytes <= 2^k`` — the CDC spread (min..max around
-    the target average) at a glance, and a CI-assertable distribution."""
-    hist: dict = {}
-    for n in sizes:
-        k = max(int(n) - 1, 0).bit_length()
-        label = f"2^{k}"
-        hist[label] = hist.get(label, 0) + 1
-    return dict(sorted(hist.items(), key=lambda kv: int(kv[0][2:])))
-
-
 def catalog_inventory(root: str) -> dict:
-    """The machine-readable catalog listing for an object-store root."""
-    from repro.objstore.catalog import Catalog
-    from repro.objstore.client import make_object_store
-    store = make_object_store(f"file:{root}")
-    cat, _ = Catalog(store).read()
-    entries = []
-    for key in sorted(cat["entries"], key=int):
-        e = cat["entries"][key]
-        man = e.get("manifest", {})
-        files = {}
-        n_chunks = total = 0
-        entry_sizes: list = []
-        for name, fe in sorted(e.get("files", {}).items()):
-            sizes = _chunk_sizes(fe)
-            entry_sizes += sizes
-            files[name] = {"size": fe["size"], "n_chunks": len(sizes),
-                           "mode": fe.get("mode", "fixed")}
-            n_chunks += len(sizes)
-            total += fe["size"]
-        entries.append({
-            "id": int(e.get("id", key)), "pinned": bool(e.get("pinned")),
-            "kind": man.get("kind"), "level": man.get("level"),
-            "wall_time": man.get("wall_time"),
-            "files": files, "total_bytes": total, "n_chunks": n_chunks,
-            "chunk_hist": _chunk_hist(entry_sizes),
-            "chunk_bytes_min": min(entry_sizes, default=0),
-            "chunk_bytes_max": max(entry_sizes, default=0),
-        })
-    return {"root": root, "epoch": int(cat["epoch"]), "entries": entries,
-            "stored_chunks": len(store.list("chunks/"))}
+    """Deprecated shim: the machine-readable catalog listing for an
+    object-store root.  The typed surface is
+    ``repro.objstore.inspect.CatalogView`` — this keeps the historical
+    dict shape for callers that still want plain JSON."""
+    from repro.objstore.inspect import CatalogView
+    return CatalogView.from_root(root, count_chunks=True).to_inventory(root)
 
 
 def list_catalog(root: str, as_json: bool) -> int:

@@ -111,6 +111,19 @@ RESTORE_SCRIPT = SUBPROC_COMMON + textwrap.dedent("""
     assert [n for n in e["files"] if ".shard" in n], e["files"]
     assert inv["stored_chunks"] >= e["n_chunks"] > 0
 
+    # the CLI output IS the typed inspect API's inventory: chkls --json
+    # must agree field-for-field with a CatalogView over the same bucket
+    from repro.objstore.inspect import CatalogView
+    root = os.path.join(ckpt_dir, "objstore")
+    view = CatalogView.from_root(root, count_chunks=True)
+    assert view.to_inventory(root) == inv, "chkls --json drifted from inspect"
+    ti = view.entry(1)
+    assert ti is not None and ti.kind == e["kind"] and ti.level == e["level"]
+    assert ti.n_chunks == e["n_chunks"] and ti.total_bytes == e["total_bytes"]
+    assert sorted(f.name for f in ti.files) == sorted(e["files"])
+    assert view.latest(kind="FULL").id == 1
+    assert len(ti.chunk_digests) <= view.stored_chunks
+
     # the recovery really is the catalog rung (nothing else exists)
     probe = make_ctx(ckpt_dir)
     got = probe.tcl.backend.engine.load_latest(lazy_sharded=True)
