@@ -216,6 +216,42 @@ def serve_swap_delta() -> Dict[str, float]:
             "serve_swap_delta_predicted": predicted}
 
 
+def cadence_datapoints() -> Dict[str, float]:
+    """Daly cadence datapoint (deterministic — no timing): drive the
+    CadenceController with the reference platform's inputs (store cost
+    observations, failures at exact MTBF spacing — comd-ft's 1000-node
+    point: delta 48.64 s, MTBF 31557.6 s) and surface its L4 schedule
+    against the closed-form optimum.
+
+    - ``cadence_interval_vs_optimum`` — controller interval / closed-form
+      Daly optimum; hard-gated to [0.9, 1.1] in
+      check_overhead_regression.py (the estimator sees 200 failures at
+      exact spacing, so drifting past 10% means the estimator or the
+      interval math broke, not noise).
+    - ``checkpoint_efficiency`` — best achievable progress fraction at
+      the controller's schedule; floor-gated against the committed
+      baseline.
+    - ``progress_rate`` — progress fraction at the (clamped) interval
+      actually scheduled."""
+    from repro.chaos.cadence import (
+        REFERENCE, CadenceConfig, CadenceController, daly_interval)
+
+    p = REFERENCE.platform(1000)
+    ctl = CadenceController(CadenceConfig(max_interval_s=1e9))
+    for _ in range(8):
+        ctl.note_store(4, p.delta_s)           # measured store cost
+    ctl.note_step(0.0)
+    for i in range(1, 201):                    # failures at exact spacing
+        ctl.note_failure(i * p.mtbf_s)
+    dp = ctl.datapoints(4)
+    ref = daly_interval(p.delta_s, p.mtbf_s)
+    return {
+        "progress_rate": dp["progress_rate"],
+        "checkpoint_efficiency": dp["checkpoint_efficiency"],
+        "cadence_interval_vs_optimum": dp["cadence_interval_s"] / ref,
+    }
+
+
 _SHARDED_SCRIPT = textwrap.dedent("""
     import os, sys, json, time, shutil
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
@@ -308,6 +344,7 @@ def run(repeats: int = 3) -> Dict[str, float]:
     out.update(objstore_store(repeats=repeats))
     out.update(objstore_shift_dedup())
     out.update(serve_swap_delta())
+    out.update(cadence_datapoints())
     return out
 
 

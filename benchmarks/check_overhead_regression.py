@@ -93,6 +93,14 @@ VELOC_RATIO_CEILING = 1.0
 # the vectorized quantize pass + f32 roundtrip-error landed (measured
 # ~1.5; 2.5 leaves scheduler headroom without readmitting the old cost)
 COMPRESS_OVERHEAD_FLOOR = 2.5
+# the cadence controller's L4 interval vs the closed-form Daly optimum —
+# deterministic (synthetic failures at exact MTBF spacing), so the band
+# is hard: outside ±10%, the MTBF estimator or the interval math broke
+CADENCE_INTERVAL_BAND = (0.90, 1.10)
+# checkpoint_efficiency is deterministic too, but the platform point may
+# legitimately move when the cadence model changes — floor it against the
+# committed baseline with a small absolute slack instead of a hard value
+CADENCE_EFFICIENCY_SLACK = 0.05
 # goodput is payload bytes over objstore store wall time — a single
 # absolute-seconds measurement, so it inherits the full +/-50% wall-clock
 # noise of this box (the ratio gates cancel that noise; goodput can't).
@@ -205,6 +213,27 @@ def main(argv=None) -> int:
         failures.append(f"objstore_goodput_bps: {gp:.3e} < baseline "
                         f"{gp_ref:.3e} / {GOODPUT_REGRESSION:.2f} "
                         f"(store-path goodput regressed)")
+
+    # cadence datapoints: the controller must track the closed-form Daly
+    # optimum (hard band — deterministic inputs) and the efficiency at
+    # its schedule must not fall below the committed baseline
+    civ = res.get("cadence_interval_vs_optimum")
+    if civ is not None and not (
+            CADENCE_INTERVAL_BAND[0] <= civ <= CADENCE_INTERVAL_BAND[1]):
+        failures.append(f"cadence_interval_vs_optimum: {civ:.3f} outside "
+                        f"{CADENCE_INTERVAL_BAND} (controller no longer "
+                        f"tracking the Daly optimum)")
+    eff = res.get("checkpoint_efficiency")
+    eff_ref = base.get("checkpoint_efficiency")
+    if eff_ref is not None and eff is None:
+        failures.append("checkpoint_efficiency: missing from results "
+                        "(baseline has it — the cadence datapoint was "
+                        "dropped)")
+    elif eff is not None and eff_ref is not None and \
+            eff < eff_ref - CADENCE_EFFICIENCY_SLACK:
+        failures.append(f"checkpoint_efficiency: {eff:.4f} < baseline "
+                        f"{eff_ref:.4f} - {CADENCE_EFFICIENCY_SLACK} "
+                        f"(cadence efficiency regressed)")
 
     # sharded-store datapoint: the shard-local path must not lose to the
     # gathered path (it currently wins ~2x — parity is the hard floor)

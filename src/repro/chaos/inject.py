@@ -1,0 +1,370 @@
+"""Injection plane: named fault sites over the stack's existing seams.
+
+The pipeline already has well-defined failure boundaries — tier place/commit
+loops in ``core/pipeline.py``, ``ObjectStore.put/get``, ``ChunkStream``
+chunk-boundary emits, the heartbeat write, ``FleetDeployer`` swap attempts,
+and the per-step hook in ``train/loop.py``. Each of those calls
+:func:`fire` with a dotted site name; a site is inert (one dict lookup)
+until a :class:`FaultSpec` is armed against it.
+
+Specs generalize ``ft/failures.FaultInjector`` from one-fault-at-90% to:
+
+* scheduled  — ``at=N`` fires on the N-th hit of the site
+* repeating  — ``every=K`` fires on every K-th hit, up to ``times`` fires
+* probabilistic — ``prob=p`` fires each hit with probability ``p``
+  (seeded; deterministic per spec)
+
+and four modes: ``error`` (raise the site's natural exception type),
+``exit`` (``os._exit(39)``, same hard-kill contract as FaultInjector),
+``delay`` (sleep ``delay_s`` — stragglers), ``corrupt`` (flip bytes in the
+payload passing through the site), ``skip`` (suppress the operation — e.g.
+a heartbeat write that never lands).
+
+Process-safe activation: ``OPENCHK_CHAOS`` holds either a JSON list of spec
+dicts or ``@/path/to/spec.json``. The registry loads it lazily on first
+use, so subprocess children of ``launch/train.py`` and the forced-16-device
+lanes arm the same faults without code changes. Malformed specs warn and
+are ignored — a bad env var must never crash a launcher at import time.
+
+Stdlib-only on purpose: every instrumented module (objstore client, chunk
+streams, pipeline, detector) can import this leaf without cycles.
+"""
+from __future__ import annotations
+
+import fnmatch
+import json
+import os
+import random
+import threading
+import time
+import warnings
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+CHAOS_ENV = "OPENCHK_CHAOS"
+LEGACY_INJECT_ENV = "OPENCHK_INJECT_AT"
+EXIT_CODE = 39  # matches ft.failures.FaultInjector's hard-kill contract
+
+_MODES = ("error", "exit", "delay", "corrupt", "skip")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by an ``error``-mode spec when the site has no natural type."""
+
+
+@dataclass
+class FaultSpec:
+    """One armed fault: where it triggers, when, and what it does."""
+
+    site: str  # dotted site name; fnmatch globs allowed ("objstore.*")
+    mode: str = "error"
+    at: Optional[int] = None  # fire on the at-th hit (1-based)
+    every: Optional[int] = None  # fire on every every-th hit
+    prob: Optional[float] = None  # fire each hit with this probability
+    times: Optional[int] = 1  # max fires (None = unlimited)
+    delay_s: float = 0.0  # sleep length for mode="delay"
+    seed: int = 0  # rng seed for prob specs
+    match: Dict[str, Any] = field(default_factory=dict)  # ctx filter
+    message: str = ""
+
+    def __post_init__(self) -> None:
+        if self.mode not in _MODES:
+            raise ValueError(f"unknown chaos mode {self.mode!r} (want one of {_MODES})")
+        if self.at is None and self.every is None and self.prob is None:
+            self.at = 1  # default: fire on the first hit
+        self._hits = 0
+        self._fired = 0
+        self._rng = random.Random(self.seed)
+
+    def matches(self, site: str, ctx: Dict[str, Any]) -> bool:
+        if not fnmatch.fnmatchcase(site, self.site):
+            return False
+        for k, want in self.match.items():
+            if str(ctx.get(k)) != str(want):
+                return False
+        return True
+
+    def should_fire(self) -> bool:
+        """Count a hit; decide whether this spec fires on it."""
+        if self.times is not None and self._fired >= self.times:
+            return False
+        self._hits += 1
+        fire = False
+        if self.at is not None and self._hits == self.at:
+            fire = True
+        if self.every is not None and self._hits % self.every == 0:
+            fire = True
+        if self.prob is not None and self._rng.random() < self.prob:
+            fire = True
+        if fire:
+            self._fired += 1
+        return fire
+
+    def to_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"site": self.site, "mode": self.mode}
+        for k in ("at", "every", "prob"):
+            v = getattr(self, k)
+            if v is not None:
+                d[k] = v
+        if self.times != 1:
+            d["times"] = self.times
+        if self.delay_s:
+            d["delay_s"] = self.delay_s
+        if self.seed:
+            d["seed"] = self.seed
+        if self.match:
+            d["match"] = self.match
+        if self.message:
+            d["message"] = self.message
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "FaultSpec":
+        known = {
+            "site", "mode", "at", "every", "prob", "times",
+            "delay_s", "seed", "match", "message",
+        }
+        extra = set(d) - known
+        if extra:
+            raise ValueError(f"unknown chaos spec keys {sorted(extra)}")
+        return cls(**d)
+
+
+@dataclass
+class FiredFault:
+    """History record of one fired fault — feeds the MTBF estimator."""
+
+    site: str
+    mode: str
+    t: float  # time.monotonic() at fire
+    ctx: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class Outcome:
+    """What :func:`fire` decided: possibly-corrupted payload + skip flag."""
+
+    data: Any = None
+    skipped: bool = False
+    fired: int = 0
+
+
+_NOOP = Outcome()
+
+
+def _corrupt_bytes(data: Any) -> Any:
+    """Flip the first byte (and a mid byte) of a bytes-like payload."""
+    if data is None:
+        return None
+    b = bytearray(bytes(data))
+    if not b:
+        return bytes(b)
+    b[0] ^= 0xFF
+    b[len(b) // 2] ^= 0xFF
+    return bytes(b)
+
+
+class ChaosRegistry:
+    """Armed fault specs + per-site counters + fired-fault history.
+
+    Thread-safe: chunk uploads fire from worker threads. The fast path
+    (nothing armed) is a single attribute read.
+    """
+
+    def __init__(self, env: Optional[Dict[str, str]] = None) -> None:
+        self._lock = threading.Lock()
+        self._specs: List[FaultSpec] = []
+        self._env = env  # None -> os.environ, resolved lazily
+        self._env_loaded = False
+        self.enabled = False
+        self.history: List[FiredFault] = []
+        self.site_hits: Dict[str, int] = {}
+
+    # -- arming -----------------------------------------------------------
+    def arm(self, spec: FaultSpec) -> FaultSpec:
+        with self._lock:
+            self._specs.append(spec)
+            self.enabled = True
+        return spec
+
+    def disarm_all(self) -> None:
+        with self._lock:
+            self._specs = []
+            self.enabled = False
+
+    def reset(self) -> None:
+        """Drop specs, counters, and history; env will be re-read."""
+        with self._lock:
+            self._specs = []
+            self._env_loaded = False
+            self.enabled = False
+            self.history = []
+            self.site_hits = {}
+
+    def specs(self) -> List[FaultSpec]:
+        self._ensure_env_loaded()
+        with self._lock:
+            return list(self._specs)
+
+    # -- env activation protocol ------------------------------------------
+    def load_env(self, env: Optional[Dict[str, str]] = None) -> int:
+        """Parse ``OPENCHK_CHAOS`` and arm its specs. Returns count armed.
+
+        Malformed values warn and arm nothing — never raise at launch time.
+        """
+        environ = env if env is not None else (self._env if self._env is not None else os.environ)
+        raw = environ.get(CHAOS_ENV, "")
+        self._env_loaded = True
+        if not raw:
+            return 0
+        try:
+            if raw.startswith("@"):
+                with open(raw[1:], "r", encoding="utf-8") as f:
+                    raw = f.read()
+            parsed = json.loads(raw)
+            if isinstance(parsed, dict):
+                parsed = [parsed]
+            specs = [FaultSpec.from_dict(d) for d in parsed]
+        except (OSError, ValueError, TypeError) as e:
+            warnings.warn(
+                f"ignoring malformed {CHAOS_ENV}: {e}", RuntimeWarning, stacklevel=2
+            )
+            return 0
+        for s in specs:
+            self.arm(s)
+        return len(specs)
+
+    def _ensure_env_loaded(self) -> None:
+        if not self._env_loaded:
+            self.load_env()
+
+    # -- firing ------------------------------------------------------------
+    def fire(
+        self,
+        site: str,
+        exc: type = InjectedFault,
+        data: Any = None,
+        **ctx: Any,
+    ) -> Outcome:
+        """Hit a fault site. Raises / exits / sleeps / corrupts per armed specs.
+
+        Call sites pass their natural exception type via ``exc`` so the
+        injected failure flows through the same handling as a real one
+        (e.g. ``ObjectStoreError`` for objstore sites). Returns the payload
+        (corrupted if a corrupt-mode spec fired) and a ``skipped`` flag.
+        """
+        self._ensure_env_loaded()
+        if not self.enabled:
+            if data is None:
+                return _NOOP
+            return Outcome(data=data)
+
+        to_raise: Optional[BaseException] = None
+        out = Outcome(data=data)
+        with self._lock:
+            self.site_hits[site] = self.site_hits.get(site, 0) + 1
+            for spec in self._specs:
+                if not spec.matches(site, ctx):
+                    continue
+                if not spec.should_fire():
+                    continue
+                out.fired += 1
+                self.history.append(
+                    FiredFault(site=site, mode=spec.mode, t=time.monotonic(), ctx=dict(ctx))
+                )
+                if spec.mode == "delay":
+                    # sleep outside the lock would be nicer, but delays are
+                    # short and scenario-scoped; keep firing atomic.
+                    time.sleep(spec.delay_s)
+                elif spec.mode == "skip":
+                    out.skipped = True
+                elif spec.mode == "corrupt":
+                    out.data = _corrupt_bytes(out.data)
+                elif spec.mode == "exit":
+                    os._exit(EXIT_CODE)
+                else:  # error
+                    msg = spec.message or f"[chaos] injected fault at {site}"
+                    to_raise = exc(msg)
+        if to_raise is not None:
+            raise to_raise
+        return out
+
+    def fired_count(self, site: Optional[str] = None) -> int:
+        with self._lock:
+            if site is None:
+                return len(self.history)
+            return sum(1 for f in self.history if fnmatch.fnmatchcase(f.site, site))
+
+    def fault_times(self) -> List[float]:
+        """Monotonic timestamps of fired faults (MTBF estimator input)."""
+        with self._lock:
+            return [f.t for f in self.history]
+
+
+# -- module-level singleton -------------------------------------------------
+_REGISTRY = ChaosRegistry()
+
+
+def registry() -> ChaosRegistry:
+    return _REGISTRY
+
+
+def fire(site: str, exc: type = InjectedFault, data: Any = None, **ctx: Any) -> Outcome:
+    return _REGISTRY.fire(site, exc=exc, data=data, **ctx)
+
+
+def arm(spec_or_site, **kw) -> FaultSpec:
+    """``arm(FaultSpec(...))`` or shorthand ``arm("site.name", mode=..., ...)``."""
+    if isinstance(spec_or_site, FaultSpec):
+        return _REGISTRY.arm(spec_or_site)
+    return _REGISTRY.arm(FaultSpec(site=spec_or_site, **kw))
+
+
+def reset() -> None:
+    _REGISTRY.reset()
+
+
+def env_for_specs(specs: List[FaultSpec]) -> Dict[str, str]:
+    """Env fragment arming *specs* in a child process."""
+    return {CHAOS_ENV: json.dumps([s.to_dict() for s in specs])}
+
+
+def legacy_inject_at(env: Optional[Dict[str, str]] = None) -> Optional[float]:
+    """Back-compat reader for ``OPENCHK_INJECT_AT`` (progress fraction).
+
+    The legacy protocol predates the chaos spec: a single float in [0, 1]
+    meaning "one hard fault at this training progress". Malformed values
+    warn and return None instead of raising at launcher import time.
+    ``ft.failures.should_inject_from_env`` is a shim over this.
+    """
+    environ = env if env is not None else os.environ
+    v = environ.get(LEGACY_INJECT_ENV, "")
+    if not v:
+        return None
+    try:
+        return float(v)
+    except ValueError:
+        warnings.warn(
+            f"ignoring malformed {LEGACY_INJECT_ENV}={v!r} (want a float progress "
+            "fraction; use OPENCHK_CHAOS for scheduled/probabilistic faults)",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+        return None
+
+
+@dataclass
+class SiteNames:
+    """Canonical site names, for discoverability (docs + scenario specs)."""
+
+    TIER_PLACE = "tier.place"  # ctx: tier, level, ckpt_id, rank
+    TIER_COMMIT = "tier.commit"  # ctx: tier, level, ckpt_id, rank
+    OBJSTORE_PUT = "objstore.put"  # ctx: key
+    OBJSTORE_GET = "objstore.get"  # ctx: key
+    CHUNK_EMIT = "chunkstream.emit"  # ctx: name, seq
+    HEARTBEAT = "heartbeat.beat"  # ctx: step
+    DEPLOY_POLL = "deploy.poll"  # ctx: replica
+    TRAIN_STEP = "train.step"  # ctx: step
+
+
+SITES = SiteNames()

@@ -130,6 +130,14 @@ class CheckpointContext:
     # directives
     # ------------------------------------------------------------------ #
 
+    def observe_store_reports(self, cb) -> "CheckpointContext":
+        """Register *cb* to receive every committed
+        :class:`~repro.core.pipeline.StoreReport` (async tails included) —
+        the cadence controller's store-cost feed
+        (``repro.chaos.cadence.CadenceController.note_report``)."""
+        self.tcl.backend.pipeline.on_report = cb
+        return self
+
     def protect(self, *specs: Union[str, Protect]) -> "CheckpointContext":
         """Declare the protected subtrees with their per-subtree clauses
         (self-iterative data expressions + the paper's data clauses):

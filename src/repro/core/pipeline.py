@@ -42,6 +42,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.chaos import inject as chaos
 from repro.core import manifest as mf
 from repro.core.comm import Communicator
 from repro.core.diff import (
@@ -232,6 +233,9 @@ class CheckpointPipeline:
         # thread; the CP queue is FIFO, so fencing on the newest fences all
         self._digest_fence: Optional[_PendingDigests] = None
         self._fence_lock = threading.Lock()
+        # observer hook: called with every committed StoreReport (the
+        # cadence controller's store-cost feed — chaos/cadence.py)
+        self.on_report = None
         os.makedirs(self.ctx.local_root, exist_ok=True)
         os.makedirs(cfg.global_root, exist_ok=True)
 
@@ -473,6 +477,9 @@ class CheckpointPipeline:
         """Run the tier stack's redundancy over the packed payload (the
         rank container plus any sibling shard files)."""
         for tier in plan.tiers:
+            chaos.fire(chaos.SITES.TIER_PLACE, tier=tier.name,
+                       level=plan.level, ckpt_id=plan.ckpt_id,
+                       rank=self.comm.rank)
             tier.place(plan.ckpt_id, packed.stage_dir, packed.path,
                        extra_files=packed.shard_files)
 
@@ -510,11 +517,18 @@ class CheckpointPipeline:
         # garbage the next GC sweeps)
         committed = mf.read_manifest(plan.root, plan.ckpt_id)
         for tier in plan.tiers:
+            chaos.fire(chaos.SITES.TIER_COMMIT, tier=tier.name,
+                       level=plan.level, ckpt_id=plan.ckpt_id,
+                       rank=self.comm.rank)
             tier.commit(plan.ckpt_id, committed)
         # seconds = store work only (plan + tail), not CP-queue waiting
-        return StoreReport(plan.ckpt_id, plan.level, plan.kind, packed.nbytes,
-                           plan.plan_seconds + (time.time() - plan.t0),
-                           plan.dirty_ratio, plan.promoted_full)
+        report = StoreReport(plan.ckpt_id, plan.level, plan.kind,
+                             packed.nbytes,
+                             plan.plan_seconds + (time.time() - plan.t0),
+                             plan.dirty_ratio, plan.promoted_full)
+        if self.on_report is not None:
+            self.on_report(report)
+        return report
 
     # ------------------------------------------------------------------ #
     # stage composition

@@ -13,15 +13,25 @@ import time
 from dataclasses import dataclass
 from typing import Optional
 
+from repro.chaos import inject as chaos
+
 
 @dataclass
 class Heartbeat:
     path: str
 
     def beat(self, step: Optional[int] = None) -> None:
+        # chaos site: a "skip"-mode spec models a worker whose heartbeat
+        # writes stop landing (hung I/O) while the process is still alive
+        if chaos.fire(chaos.SITES.HEARTBEAT, step=step).skipped:
+            return
         tmp = self.path + ".tmp"
         with open(tmp, "w") as f:
             f.write(f"{time.time()} {step if step is not None else -1}")
+            # fsync before the rename: a host crash must not leave a
+            # fresh-mtime/empty-content heartbeat that masks a dead worker
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, self.path)
 
     def last(self) -> Optional[float]:

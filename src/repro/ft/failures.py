@@ -1,10 +1,17 @@
 """Fault injection (evaluation methodology §6.1: deterministic fault at 90 %
-of application progress, then restart until successful completion)."""
+of application progress, then restart until successful completion).
+
+This is the *legacy* single-fault injector. The general harness —
+scheduled, probabilistic and repeating faults at named sites across the
+whole stack — lives in :mod:`repro.chaos.inject`; the env protocol here
+(``OPENCHK_INJECT_AT``) is kept as a back-compat shim over it."""
 from __future__ import annotations
 
 import os
 from dataclasses import dataclass
 from typing import Optional
+
+from repro.chaos.inject import legacy_inject_at
 
 
 class SimulatedFault(RuntimeError):
@@ -37,6 +44,10 @@ class FaultInjector:
 
 def should_inject_from_env() -> Optional[float]:
     """Launcher protocol: OPENCHK_INJECT_AT=0.9 enables injection in child
-    training processes (used by launch/train.py --survive-faults)."""
-    v = os.environ.get("OPENCHK_INJECT_AT")
-    return float(v) if v else None
+    training processes (used by launch/train.py --supervise).
+
+    Back-compat shim over :func:`repro.chaos.inject.legacy_inject_at`: a
+    malformed value warns and returns None instead of raising ValueError
+    at launcher import time (new code should arm ``OPENCHK_CHAOS`` specs
+    at site ``train.step`` instead)."""
+    return legacy_inject_at(os.environ)

@@ -50,12 +50,19 @@ def worker(args) -> int:
     injector = FaultInjector(args.steps, inject_at, hard=args.hard_fault) \
         if inject_at else None
 
+    cadence = None
+    if args.cadence:
+        from repro.chaos.cadence import CadenceConfig, CadenceController
+        cadence = CadenceController(CadenceConfig(
+            prior_mtbf_s=args.cadence_mtbf))
+
     loop = LoopConfig(
         total_steps=args.steps,
         ckpt_every=args.ckpt_every,
         kind="DIFF" if args.differential else "FULL",
         levels=LevelSchedule(),
         heartbeat_path=os.path.join(args.ckpt_dir, "heartbeat"),
+        cadence=cadence,
     )
     try:
         summary = run_training(model, step_fn, state, ckpt, loop,
@@ -69,6 +76,7 @@ def worker(args) -> int:
 
 def supervise(args) -> int:
     """Restart launcher: run worker until success, restarting on failure."""
+    from repro.ft.backoff import ExponentialBackoff
     from repro.ft.detector import Heartbeat, HeartbeatMonitor
 
     cmd = [sys.executable, "-m", "repro.launch.train"] + [
@@ -79,6 +87,10 @@ def supervise(args) -> int:
         cmd = [c for c in cmd if not c.startswith("--inject-at")
                and c != str(args.inject_at)]
     hb = Heartbeat(os.path.join(args.ckpt_dir, "heartbeat"))
+    # same policy as the deployer's pinned-replica retries: a crash-looping
+    # worker must not hammer the shared tiers at full speed
+    backoff = ExponentialBackoff(base_s=args.restart_backoff,
+                                 max_s=args.restart_backoff_max)
     attempts = 0
     while attempts < args.max_restarts + 1:
         attempts += 1
@@ -100,7 +112,15 @@ def supervise(args) -> int:
             return 0
         print(f"[supervisor] worker died rc={rc} "
               f"(last step {hb.last_step()}); restarting from checkpoint")
-        env.pop("OPENCHK_INJECT_AT", None)     # fault fired; clean restarts
+        # fault fired; clean restarts — a chaos spec left armed would kill
+        # every restarted child at the same hit count (scenario runs that
+        # want repeated harassment use repro.chaos.runner, not --supervise)
+        env.pop("OPENCHK_INJECT_AT", None)
+        env.pop("OPENCHK_CHAOS", None)
+        delay = backoff.failed()
+        if delay > 0:
+            print(f"[supervisor] backing off {delay:.1f}s before restart")
+            time.sleep(delay)
     print("[supervisor] giving up")
     return 1
 
@@ -126,6 +146,15 @@ def main() -> int:
     ap.add_argument("--supervise", action="store_true")
     ap.add_argument("--max-restarts", type=int, default=3)
     ap.add_argument("--heartbeat-timeout", type=float, default=120.0)
+    ap.add_argument("--restart-backoff", type=float, default=1.0,
+                    help="base seconds between restart attempts (doubles "
+                         "per consecutive failure)")
+    ap.add_argument("--restart-backoff-max", type=float, default=30.0)
+    ap.add_argument("--cadence", action="store_true",
+                    help="Daly-optimal adaptive checkpoint cadence instead "
+                         "of the fixed --ckpt-every cycle")
+    ap.add_argument("--cadence-mtbf", type=float, default=3600.0,
+                    help="prior MTBF seconds for the cadence controller")
     args = ap.parse_args()
     os.makedirs(args.ckpt_dir, exist_ok=True)
     if args.supervise:

@@ -47,6 +47,7 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
+from repro.chaos import inject as chaos
 from repro.objstore.cdc import CDCParams, Chunker
 from repro.objstore.client import ObjectStore, ObjectStoreError
 
@@ -490,6 +491,13 @@ class ChunkStream:
 
     def _emit(self, data: bytes) -> None:
         up = self.uploader
+        # chaos site at the chunk boundary: error-mode kills the store
+        # mid-stream, corrupt-mode flips the bytes BEFORE digesting — the
+        # digest then matches the corrupted content, so restore-side
+        # integrity (container checksums) is what must catch it
+        data = chaos.fire(chaos.SITES.CHUNK_EMIT, exc=ObjectStoreError,
+                          data=data, name=self.name,
+                          seq=len(self._chunks)).data
         digest = hashlib.sha256(data).hexdigest()
         self._chunks.append((digest, self._offset, len(data)))
         self._offset += len(data)

@@ -40,6 +40,8 @@ import threading
 import uuid
 from typing import Dict, List, Optional, Tuple
 
+from repro.chaos import inject as chaos
+
 
 def content_etag(data: bytes) -> str:
     """Etag = sha256 of content (stable across processes and backends)."""
@@ -128,6 +130,8 @@ class MemoryObjectStore(ObjectStore):
 
     def put(self, key, data, *, if_match=None, if_none_match=False):
         _check_key(key)
+        data = chaos.fire(chaos.SITES.OBJSTORE_PUT, exc=ObjectStoreError,
+                          data=bytes(data), key=key).data
         with self._lock:
             cur = self._objects.get(key)
             self._check_cond(key, cur, if_match, if_none_match)
@@ -146,7 +150,9 @@ class MemoryObjectStore(ObjectStore):
         with self._lock:
             if key not in self._objects:
                 raise ObjectStoreError(f"no such object: {key}")
-            return self._objects[key]
+            blob = self._objects[key]
+        return chaos.fire(chaos.SITES.OBJSTORE_GET, exc=ObjectStoreError,
+                          data=blob, key=key).data
 
     def get_with_etag(self, key):
         with self._lock:
@@ -253,7 +259,8 @@ class LocalFSObjectStore(ObjectStore):
 
     def put(self, key, data, *, if_match=None, if_none_match=False):
         path = self._path(key)
-        data = bytes(data)
+        data = chaos.fire(chaos.SITES.OBJSTORE_PUT, exc=ObjectStoreError,
+                          data=bytes(data), key=key).data
         if if_match is None and not if_none_match:
             self._write_atomic(path, data)
             return content_etag(data)
@@ -269,9 +276,11 @@ class LocalFSObjectStore(ObjectStore):
     def get(self, key):
         try:
             with open(self._path(key), "rb") as f:
-                return f.read()
+                blob = f.read()
         except FileNotFoundError:
             raise ObjectStoreError(f"no such object: {key}") from None
+        return chaos.fire(chaos.SITES.OBJSTORE_GET, exc=ObjectStoreError,
+                          data=blob, key=key).data
 
     def get_with_etag(self, key):
         try:

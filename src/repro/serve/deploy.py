@@ -56,7 +56,9 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
+from repro.chaos import inject as chaos
 from repro.core import manifest as mf
+from repro.ft.backoff import backoff_delay
 from repro.core.formats import CHK5CorruptionError, CHK5Reader
 from repro.core.protect import flatten_named, unflatten_named
 from repro.core.resharding import load_named_onto
@@ -215,8 +217,8 @@ class FleetDeployer:
             # was installed — and the rollout holds at this replica
             r.failures += 1
             r.last_error = f"{type(e).__name__}: {e}"
-            r.next_retry_t = now + min(
-                self.backoff_s * (2 ** (r.failures - 1)), self.max_backoff_s)
+            r.next_retry_t = now + backoff_delay(
+                r.failures, self.backoff_s, self.max_backoff_s)
             self.stats["pulls_failed"] += 1
             return {"action": "pinned", "replica": r.name,
                     "epoch": r.engine.weights.epoch,
@@ -249,6 +251,10 @@ class FleetDeployer:
         """Pull + assemble + atomic flip for one replica.  Everything up
         to ``set_weights`` is side-effect-free for the serving path —
         any exception leaves the old handle serving."""
+        # chaos site: an error-mode spec here exercises invariant 3 end to
+        # end — poll() must pin the replica, never tear the fleet
+        chaos.fire(chaos.SITES.DEPLOY_POLL, exc=ObjectStoreError,
+                   replica=r.name, entry=entry.id)
         pulled = r.puller(self.store).pull(entry)
         self.stats["bytes_fetched"] += pulled["bytes_fetched"]
         self.stats["bytes_cached"] += pulled["bytes_cached"]

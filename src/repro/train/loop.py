@@ -19,10 +19,12 @@ from typing import Any, Callable, Dict, Optional
 
 import jax
 
+from repro.chaos import inject as chaos
+from repro.chaos.cadence import CadenceController
 from repro.core.context import CHK_FULL, CheckpointContext
 from repro.data.synthetic import next_batch
 from repro.ft.detector import Heartbeat
-from repro.ft.failures import FaultInjector
+from repro.ft.failures import FaultInjector, SimulatedFault
 from repro.models.zoo import Model
 from repro.train.state import TrainState
 
@@ -53,6 +55,12 @@ class LoopConfig:
     levels: LevelSchedule = field(default_factory=LevelSchedule)
     heartbeat_path: Optional[str] = None
     log_every: int = 10
+    #: Daly-optimal adaptive cadence (chaos/cadence.py).  When set, the
+    #: fixed ckpt_every/LevelSchedule cycle is replaced by wall-time
+    #: intervals the controller derives per tier from measured store cost
+    #: and its online MTBF estimate — L1 stays frequent (tiny delta), L4
+    #: tracks the Daly optimum.
+    cadence: Optional[CadenceController] = None
 
 
 def run_training(
@@ -70,11 +78,20 @@ def run_training(
     hb = Heartbeat(loop.heartbeat_path) if loop.heartbeat_path else None
     jit_step = jax.jit(train_step) if not hasattr(train_step, "lower") else train_step
 
+    cadence = loop.cadence
+    if cadence is not None:
+        ckpt.observe_store_reports(cadence.note_report)  # store-cost feed
+
     # ---- chk load: transparent restart ---------------------------------- #
+    t_load = time.time()
     state = ckpt.load(state)
     start = int(state.step)
     if ckpt.restarted:
         log(f"[openchk] restart detected → resuming from step {start}")
+        if cadence is not None:
+            # a restart is a failure observation plus a recovery-cost sample
+            cadence.note_failure()
+            cadence.note_recovery(4, time.time() - t_load)
 
     t0 = time.time()
     metrics: Dict[str, Any] = {}
@@ -88,15 +105,31 @@ def run_training(
 
         if injector is not None:
             injector.maybe_fail(step + 1)
+        # chaos site: scheduled/probabilistic/repeating step faults armed
+        # via OPENCHK_CHAOS (generalizes the one-fault-at-90% injector)
+        chaos.fire(chaos.SITES.TRAIN_STEP, exc=SimulatedFault, step=step + 1)
 
         # ---- chk store with if_/id/level/kind clauses ------------------- #
-        is_ckpt = (step + 1) % loop.ckpt_every == 0
-        if is_ckpt:
-            n_ckpts += 1
+        if cadence is not None:
+            cadence.note_step()
+            cadence.ingest_chaos_history()
+            due = cadence.due_levels()
+            is_ckpt = bool(due)
+            if is_ckpt:
+                n_ckpts += 1
+                level = due[0]           # strongest due tier (stacks nest)
+                cadence.mark_stored(level)
+            else:
+                level = 1
+        else:
+            is_ckpt = (step + 1) % loop.ckpt_every == 0
+            if is_ckpt:
+                n_ckpts += 1
+            level = loop.levels.level_for(n_ckpts)
         ckpt.store(
             state,
             id=step + 1,
-            level=loop.levels.level_for(n_ckpts),
+            level=level,
             kind=loop.kind,
             if_=is_ckpt,
         )
@@ -108,7 +141,7 @@ def run_training(
                 f"({(time.time() - t0):.1f}s)")
 
     ckpt.wait()
-    return {
+    summary = {
         "final_step": loop.total_steps,
         "loss": float(metrics.get("loss", float("nan"))),
         "seconds": time.time() - t0,
@@ -116,3 +149,6 @@ def run_training(
         "stats": dict(ckpt.stats),
         "state": state,
     }
+    if cadence is not None:
+        summary["cadence"] = cadence.datapoints()
+    return summary
