@@ -37,6 +37,14 @@ And the objstore datapoints:
   ratio threshold — goodput is an absolute-seconds datapoint and eats
   the box's full wall-clock noise).
 
+And the chaos recovery datapoints (node-loss-mid-store, best-of-N):
+
+- ``chaos_mttr_s`` — wall time from node death to a verified bit-exact
+  partner restore.  Absolute seconds like goodput, so it only fails
+  above a 5 s floor AND a wide multiple of the committed baseline.
+- ``chaos_data_loss_bytes`` — hard-gated at exactly 0: a fault may cost
+  recovery time, never checkpoint data.
+
 And the sharded-store datapoint (forced-16-device mesh, 64 MiB leaf):
 ``sharded_store_s`` (shard-local Plan snapshot + parallel shard-file
 writes) must not exceed ``gathered_store_s`` (full-tree gather) — the
@@ -110,6 +118,13 @@ CADENCE_EFFICIENCY_SLACK = 0.05
 # (2.0-2.8e7 B/s against a 2.8e7 baseline), while a real extra pass over
 # the bytes (the pre-fused path cost ~2x) still trips it
 GOODPUT_REGRESSION = 1.9
+# chaos MTTR (node death → verified bit-exact partner restore) is an
+# absolute-seconds measurement like goodput: sub-second restores never
+# fail (the floor), and above the floor the gate allows a wide multiple
+# of the committed best-of-N baseline before declaring the recovery path
+# regressed
+CHAOS_MTTR_ABS_FLOOR = 5.0
+CHAOS_MTTR_REGRESSION = 3.0
 
 
 def main(argv=None) -> int:
@@ -234,6 +249,25 @@ def main(argv=None) -> int:
         failures.append(f"checkpoint_efficiency: {eff:.4f} < baseline "
                         f"{eff_ref:.4f} - {CADENCE_EFFICIENCY_SLACK} "
                         f"(cadence efficiency regressed)")
+
+    # chaos recovery datapoints: MTTR floored + wide-multiple gated, and
+    # the zero-loss invariant is hard (a fault may cost time, never data)
+    cm = res.get("chaos_mttr_s")
+    cm_ref = base.get("chaos_mttr_s")
+    if cm_ref is not None and cm is None:
+        failures.append("chaos_mttr_s: missing from results (baseline has "
+                        "it — the compound-fault recovery datapoint was "
+                        "dropped)")
+    elif cm is not None and cm > CHAOS_MTTR_ABS_FLOOR and (
+            cm_ref is None or cm > cm_ref * CHAOS_MTTR_REGRESSION):
+        failures.append(f"chaos_mttr_s: {cm:.3f}s > "
+                        f"max({CHAOS_MTTR_ABS_FLOOR}s floor, baseline "
+                        f"{cm_ref} x {CHAOS_MTTR_REGRESSION}) "
+                        f"(fault recovery path regressed)")
+    cl = res.get("chaos_data_loss_bytes")
+    if cl is not None and cl != 0:
+        failures.append(f"chaos_data_loss_bytes: {cl} != 0 (a chaos "
+                        f"scenario lost checkpoint data)")
 
     # sharded-store datapoint: the shard-local path must not lose to the
     # gathered path (it currently wins ~2x — parity is the hard floor)

@@ -40,13 +40,21 @@ tracks the Daly optimum.
 """
 from __future__ import annotations
 
+import json
 import math
+import os
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 # -- reference constants (SNIPPETS.md snippet 3, comd-ft) -------------------
 SECONDS_PER_YEAR = 365.25 * 86400.0
+
+# checkpoint kinds, mirrored from core/protect.py (string-stable contract;
+# re-declared here so the chaos package stays a stdlib-only leaf)
+CHK_FULL_KIND = "FULL"
+CHK_DIFF_KIND = "DIFF"
 
 
 @dataclass(frozen=True)
@@ -145,6 +153,20 @@ class MTBFEstimator:
     def failures(self) -> int:
         return self._failures
 
+    @property
+    def span_s(self) -> float:
+        return self._span_s
+
+    def merge(self, failures: int, span_s: float) -> None:
+        """Fold in observations made by *another* estimator — the
+        supervisor's real worker-death/heartbeat-gap record, handed to a
+        restarted worker through :class:`MTBFFeed` — without disturbing
+        this estimator's own progress cursor."""
+        if span_s > 0.0:
+            self._span_s += float(span_s)
+        if failures > 0:
+            self._failures += int(failures)
+
     def note_progress(self, t: Optional[float] = None) -> None:
         """A liveness mark (heartbeat / step) at monotonic time *t*."""
         t = time.monotonic() if t is None else t
@@ -175,10 +197,79 @@ class MTBFEstimator:
         return num / den if den > 0 else self.prior_mtbf_s
 
 
+class MTBFFeed:
+    """Durable failure-observation file: supervisor writes, worker seeds.
+
+    The supervisor watches worker deaths and heartbeat gaps from outside
+    the process; a restarted worker's fresh :class:`MTBFEstimator` would
+    otherwise start blind at the prior.  The feed closes that loop: the
+    supervisor :meth:`write` s its estimator's (failures, span) plus
+    death/MTTR bookkeeping after every death, and the worker
+    :meth:`seed` s them into its cadence estimator at startup.  Atomic
+    tmp+replace writes; malformed content warns and seeds nothing — a
+    corrupt feed must never stop a restart."""
+
+    def __init__(self, path: str) -> None:
+        self.path = path
+
+    def read(self) -> Optional[Dict]:
+        try:
+            with open(self.path, "r", encoding="utf-8") as f:
+                blob = json.load(f)
+            if not isinstance(blob, dict):
+                raise ValueError("feed root must be a JSON object")
+            return blob
+        except FileNotFoundError:
+            return None
+        except (OSError, ValueError) as e:
+            warnings.warn(f"ignoring malformed MTBF feed at {self.path}: {e}",
+                          RuntimeWarning, stacklevel=2)
+            return None
+
+    def write(self, estimator: MTBFEstimator, *, deaths: int = 0,
+              mttr_s: Optional[List[float]] = None) -> None:
+        blob = {
+            "failures": estimator.failures,
+            "span_s": round(estimator.span_s, 6),
+            "estimate_s": round(estimator.estimate(), 6),
+            "deaths": deaths,
+            "mttr_s": [round(m, 6) for m in (mttr_s or [])],
+        }
+        tmp = self.path + ".tmp"
+        try:
+            with open(tmp, "w", encoding="utf-8") as f:
+                json.dump(blob, f, sort_keys=True)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.path)
+        except OSError as e:
+            warnings.warn(f"could not write MTBF feed to {self.path}: {e}",
+                          RuntimeWarning, stacklevel=2)
+
+    def seed(self, estimator: MTBFEstimator) -> bool:
+        """Merge the feed's observations into *estimator*; True if any."""
+        blob = self.read()
+        if not blob:
+            return False
+        try:
+            failures = int(blob.get("failures", 0))
+            span_s = float(blob.get("span_s", 0.0))
+        except (TypeError, ValueError) as e:
+            warnings.warn(f"ignoring malformed MTBF feed at {self.path}: {e}",
+                          RuntimeWarning, stacklevel=2)
+            return False
+        if failures <= 0 and span_s <= 0.0:
+            return False
+        estimator.merge(failures, span_s)
+        return True
+
+
 # -- per-tier cadence controller ---------------------------------------------
 @dataclass
 class _LevelCost:
-    store_s: Optional[float] = None  # EWMA
+    store_s: Optional[float] = None  # EWMA (FULL / promoted stores)
+    diff_store_s: Optional[float] = None  # EWMA (non-promoted DIFF stores)
+    dirty_ratio: Optional[float] = None  # EWMA of observed DIFF dirty ratio
     recovery_s: Optional[float] = None  # EWMA
     n_stores: int = 0
 
@@ -192,6 +283,11 @@ class CadenceConfig:
     prior_mtbf_s: float = 3600.0
     prior_store_s: float = 1.0  # assumed delta before any measurement
     gap_failure_s: Optional[float] = None
+    #: dirty-ratio break-even above which the diff engine promotes to
+    #: FULL (mirrors StorageConfig.promote_threshold) — at or past it the
+    #: DIFF interval collapses onto the FULL interval, because the store
+    #: the schedule would trigger is going to be a FULL anyway
+    promote_threshold: float = 0.95
 
 
 class CadenceController:
@@ -227,9 +323,34 @@ class CadenceController:
         c.store_s = self._ewma(c.store_s, float(seconds))
         c.n_stores += 1
 
+    def note_diff_store(self, level: int, seconds: Optional[float] = None,
+                        dirty_ratio: Optional[float] = None) -> None:
+        """A non-promoted DIFF store: its own cost EWMA + dirty ratio."""
+        c = self._costs.setdefault(level, _LevelCost())
+        if seconds is not None:
+            c.diff_store_s = self._ewma(c.diff_store_s, float(seconds))
+            c.n_stores += 1
+        if dirty_ratio is not None:
+            c.dirty_ratio = self._ewma(c.dirty_ratio, float(dirty_ratio))
+
     def note_report(self, report) -> None:
-        """Observer hook for ``CheckpointPipeline.on_report``."""
-        self.note_store(int(report.level), float(report.seconds))
+        """Observer hook for ``CheckpointPipeline.on_report``.
+
+        Routes by what the store actually was: a DIFF that the engine
+        promoted to FULL (dirty ratio past break-even) is a FULL cost
+        observation — charging its wall time to the DIFF EWMA would make
+        the DIFF schedule pay FULL prices forever after one hot step."""
+        level = int(report.level)
+        kind = getattr(report, "kind", CHK_FULL_KIND)
+        promoted = bool(getattr(report, "promoted_full", False))
+        dirty = getattr(report, "dirty_ratio", None)
+        if kind == CHK_DIFF_KIND and not promoted:
+            self.note_diff_store(level, float(report.seconds), dirty)
+        else:
+            self.note_store(level, float(report.seconds))
+            if promoted and dirty is not None:
+                # the promotion still carries dirty-ratio evidence
+                self.note_diff_store(level, None, float(dirty))
 
     def note_recovery(self, level: int, seconds: float) -> None:
         c = self._costs.setdefault(level, _LevelCost())
@@ -267,15 +388,44 @@ class CadenceController:
         # snippet assumption (2): recovery reads what the store wrote
         return self.store_cost(level)
 
-    def interval_for(self, level: int) -> float:
-        """Daly-optimal compute interval for *level*, clamped to config."""
-        tau = daly_interval(self.store_cost(level), self.mtbf.estimate())
+    def diff_store_cost(self, level: int) -> float:
+        """Expected delta for a DIFF store at *level* — the dirty-ratio
+        economics folded into the Daly math.
+
+        Past the promote threshold the engine turns the DIFF into a FULL,
+        so the cost *is* the FULL cost.  Below it, a measured DIFF EWMA
+        wins; with only a dirty ratio observed, the FULL cost scales by
+        it (a DIFF writes ~dirty_ratio of the payload); with nothing
+        observed, assume FULL (never schedule cheaper than evidence)."""
+        c = self._costs.get(level)
+        full = self.store_cost(level)
+        if c is None:
+            return full
+        if (c.dirty_ratio is not None
+                and c.dirty_ratio >= self.cfg.promote_threshold):
+            return full
+        if c.diff_store_s is not None:
+            return c.diff_store_s
+        if c.dirty_ratio is not None:
+            return max(c.dirty_ratio, 1e-3) * full
+        return full
+
+    def interval_for(self, level: int, kind: str = CHK_FULL_KIND) -> float:
+        """Daly-optimal compute interval for *level*, clamped to config.
+
+        ``kind=CHK_DIFF_KIND`` paces DIFF stores by their own (cheaper)
+        delta instead of FULL pricing — the ROADMAP's cadence-aware DIFF
+        scheduling rung."""
+        delta = (self.diff_store_cost(level) if kind == CHK_DIFF_KIND
+                 else self.store_cost(level))
+        tau = daly_interval(delta, self.mtbf.estimate())
         return min(max(tau, self.cfg.min_interval_s), self.cfg.max_interval_s)
 
-    def schedule(self) -> Dict[int, float]:
-        return {lv: self.interval_for(lv) for lv in self.cfg.levels}
+    def schedule(self, kind: str = CHK_FULL_KIND) -> Dict[int, float]:
+        return {lv: self.interval_for(lv, kind) for lv in self.cfg.levels}
 
-    def due_levels(self, now: Optional[float] = None) -> List[int]:
+    def due_levels(self, now: Optional[float] = None,
+                   kind: str = CHK_FULL_KIND) -> List[int]:
         """Levels whose interval has elapsed since their last store.
 
         Highest level first, so a step that crosses several thresholds
@@ -286,7 +436,7 @@ class CadenceController:
         due = []
         for lv in sorted(self.cfg.levels, reverse=True):
             last = self._last_store_t.get(lv)
-            if last is None or (now - last) >= self.interval_for(lv):
+            if last is None or (now - last) >= self.interval_for(lv, kind):
                 due.append(lv)
         return due
 

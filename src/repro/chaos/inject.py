@@ -26,12 +26,24 @@ use, so subprocess children of ``launch/train.py`` and the forced-16-device
 lanes arm the same faults without code changes. Malformed specs warn and
 are ignored — a bad env var must never crash a launcher at import time.
 
+Restart-durable counters: ``OPENCHK_CHAOS_STATE`` names a JSON file where
+each spec's hit/fired counters (and RNG state, for ``prob`` specs) persist
+across process deaths — written atomically on every counted hit and, for
+``exit`` mode, *before* ``os._exit``. A restarted child reloads the file
+and resumes each spec mid-schedule: an exhausted ``every=8, times=1`` kill
+spec stays exhausted instead of re-killing every restart at the same hit
+count. Specs declare ``rearm`` (default True = stay armed across
+restarts); :func:`restart_env` applies those semantics for supervisors,
+replacing the old blanket ``env.pop(OPENCHK_CHAOS)``. Malformed state
+warns and is ignored, like the env protocol.
+
 Stdlib-only on purpose: every instrumented module (objstore client, chunk
 streams, pipeline, detector) can import this leaf without cycles.
 """
 from __future__ import annotations
 
 import fnmatch
+import hashlib
 import json
 import os
 import random
@@ -42,6 +54,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 CHAOS_ENV = "OPENCHK_CHAOS"
+CHAOS_STATE_ENV = "OPENCHK_CHAOS_STATE"
 LEGACY_INJECT_ENV = "OPENCHK_INJECT_AT"
 EXIT_CODE = 39  # matches ft.failures.FaultInjector's hard-kill contract
 
@@ -66,6 +79,7 @@ class FaultSpec:
     seed: int = 0  # rng seed for prob specs
     match: Dict[str, Any] = field(default_factory=dict)  # ctx filter
     message: str = ""
+    rearm: bool = True  # stay armed across supervised restarts
 
     def __post_init__(self) -> None:
         if self.mode not in _MODES:
@@ -116,18 +130,47 @@ class FaultSpec:
             d["match"] = self.match
         if self.message:
             d["message"] = self.message
+        if not self.rearm:
+            d["rearm"] = False
         return d
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "FaultSpec":
         known = {
             "site", "mode", "at", "every", "prob", "times",
-            "delay_s", "seed", "match", "message",
+            "delay_s", "seed", "match", "message", "rearm",
         }
         extra = set(d) - known
         if extra:
             raise ValueError(f"unknown chaos spec keys {sorted(extra)}")
         return cls(**d)
+
+    # -- restart-durable counters -----------------------------------------
+    def state_key(self) -> str:
+        """Stable content hash naming this spec in the durable state file.
+
+        Keyed on the serialized spec, not its position in the env list, so
+        a supervisor that rewrites ``OPENCHK_CHAOS`` (dropping a
+        ``rearm=False`` sibling) still matches the surviving specs to
+        their persisted counters."""
+        blob = json.dumps(self.to_dict(), sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    def counters(self) -> Dict[str, Any]:
+        st: Dict[str, Any] = {"hits": self._hits, "fired": self._fired}
+        if self.prob is not None:
+            version, ints, gauss = self._rng.getstate()
+            st["rng"] = [version, list(ints), gauss]
+        return st
+
+    def restore_counters(self, st: Dict[str, Any]) -> None:
+        self._hits = int(st.get("hits", 0))
+        self._fired = int(st.get("fired", 0))
+        rng = st.get("rng")
+        if rng is not None and self.prob is not None:
+            version, ints, gauss = rng
+            self._rng.setstate(
+                (int(version), tuple(int(i) for i in ints), gauss))
 
 
 @dataclass
@@ -179,10 +222,13 @@ class ChaosRegistry:
         self.enabled = False
         self.history: List[FiredFault] = []
         self.site_hits: Dict[str, int] = {}
+        self._state_path: Optional[str] = None
+        self._persisted: Dict[str, Dict[str, Any]] = {}
 
     # -- arming -----------------------------------------------------------
     def arm(self, spec: FaultSpec) -> FaultSpec:
         with self._lock:
+            self._apply_state_locked(spec)
             self._specs.append(spec)
             self.enabled = True
         return spec
@@ -200,6 +246,68 @@ class ChaosRegistry:
             self.enabled = False
             self.history = []
             self.site_hits = {}
+            self._state_path = None
+            self._persisted = {}
+
+    # -- restart-durable state file ---------------------------------------
+    def set_state_path(self, path: Optional[str]) -> None:
+        """Point at the durable counter file; reload + apply to armed specs."""
+        with self._lock:
+            self._state_path = path
+            self._persisted = self._read_state(path) if path else {}
+            for spec in self._specs:
+                self._apply_state_locked(spec)
+
+    @staticmethod
+    def _read_state(path: str) -> Dict[str, Dict[str, Any]]:
+        try:
+            with open(path, "r", encoding="utf-8") as f:
+                st = json.load(f)
+            if not isinstance(st, dict):
+                raise ValueError("state root must be a JSON object")
+            return {str(k): dict(v) for k, v in st.items()}
+        except FileNotFoundError:
+            return {}
+        except (OSError, ValueError, TypeError, AttributeError) as e:
+            warnings.warn(
+                f"ignoring malformed chaos state at {path}: {e}",
+                RuntimeWarning, stacklevel=2)
+            return {}
+
+    def _apply_state_locked(self, spec: FaultSpec) -> None:
+        st = self._persisted.get(spec.state_key())
+        if st is None:
+            return
+        try:
+            spec.restore_counters(st)
+        except (ValueError, TypeError) as e:
+            warnings.warn(
+                f"ignoring malformed chaos state for spec {spec.site!r}: {e}",
+                RuntimeWarning, stacklevel=2)
+
+    def _persist_state_locked(self) -> None:
+        """Atomically write every armed spec's counters (tmp + replace).
+
+        Called on each counted hit while a state path is set, and — the
+        load-bearing case — immediately before an ``exit``-mode
+        ``os._exit``, so the kill the spec just dealt is on disk before
+        the process dies."""
+        if self._state_path is None:
+            return
+        state = dict(self._persisted)
+        for spec in self._specs:
+            state[spec.state_key()] = spec.counters()
+        tmp = self._state_path + ".tmp"
+        try:
+            with open(tmp, "w", encoding="utf-8") as f:
+                json.dump(state, f, sort_keys=True)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self._state_path)
+        except OSError as e:
+            warnings.warn(
+                f"could not persist chaos state to {self._state_path}: {e}",
+                RuntimeWarning, stacklevel=2)
 
     def specs(self) -> List[FaultSpec]:
         self._ensure_env_loaded()
@@ -215,16 +323,15 @@ class ChaosRegistry:
         environ = env if env is not None else (self._env if self._env is not None else os.environ)
         raw = environ.get(CHAOS_ENV, "")
         self._env_loaded = True
+        state_path = environ.get(CHAOS_STATE_ENV, "")
+        if state_path:
+            # durable counters load before arming so each armed spec
+            # resumes mid-schedule instead of replaying from hit zero
+            self.set_state_path(state_path)
         if not raw:
             return 0
         try:
-            if raw.startswith("@"):
-                with open(raw[1:], "r", encoding="utf-8") as f:
-                    raw = f.read()
-            parsed = json.loads(raw)
-            if isinstance(parsed, dict):
-                parsed = [parsed]
-            specs = [FaultSpec.from_dict(d) for d in parsed]
+            specs = _parse_specs(raw)
         except (OSError, ValueError, TypeError) as e:
             warnings.warn(
                 f"ignoring malformed {CHAOS_ENV}: {e}", RuntimeWarning, stacklevel=2
@@ -263,9 +370,11 @@ class ChaosRegistry:
         out = Outcome(data=data)
         with self._lock:
             self.site_hits[site] = self.site_hits.get(site, 0) + 1
+            mutated = False
             for spec in self._specs:
                 if not spec.matches(site, ctx):
                     continue
+                mutated = True                 # should_fire counts the hit
                 if not spec.should_fire():
                     continue
                 out.fired += 1
@@ -281,10 +390,16 @@ class ChaosRegistry:
                 elif spec.mode == "corrupt":
                     out.data = _corrupt_bytes(out.data)
                 elif spec.mode == "exit":
+                    # the kill must be on disk before the process dies —
+                    # a restarted child that reloads stale counters would
+                    # be re-killed at the same hit count
+                    self._persist_state_locked()
                     os._exit(EXIT_CODE)
                 else:  # error
                     msg = spec.message or f"[chaos] injected fault at {site}"
                     to_raise = exc(msg)
+            if mutated:
+                self._persist_state_locked()
         if to_raise is not None:
             raise to_raise
         return out
@@ -324,9 +439,60 @@ def reset() -> None:
     _REGISTRY.reset()
 
 
-def env_for_specs(specs: List[FaultSpec]) -> Dict[str, str]:
-    """Env fragment arming *specs* in a child process."""
-    return {CHAOS_ENV: json.dumps([s.to_dict() for s in specs])}
+def _parse_specs(raw: str) -> List[FaultSpec]:
+    """Parse an ``OPENCHK_CHAOS`` value (JSON list/dict or ``@file``)."""
+    if raw.startswith("@"):
+        with open(raw[1:], "r", encoding="utf-8") as f:
+            raw = f.read()
+    parsed = json.loads(raw)
+    if isinstance(parsed, dict):
+        parsed = [parsed]
+    return [FaultSpec.from_dict(d) for d in parsed]
+
+
+def env_for_specs(specs: List[FaultSpec],
+                  state_path: Optional[str] = None) -> Dict[str, str]:
+    """Env fragment arming *specs* in a child process.
+
+    With *state_path*, the child persists per-spec hit/fired counters (and
+    RNG state) there, so a restarted child resumes each spec mid-schedule
+    instead of replaying it from hit zero."""
+    env = {CHAOS_ENV: json.dumps([s.to_dict() for s in specs])}
+    if state_path:
+        env[CHAOS_STATE_ENV] = state_path
+    return env
+
+
+def restart_env(env: Dict[str, str]) -> Dict[str, str]:
+    """Spec-declared rearm semantics for a restarted child's env.
+
+    Replaces the supervisor's old blanket ``env.pop(OPENCHK_CHAOS)``:
+    ``rearm=True`` specs (the default) stay armed — the durable state file
+    keeps an exhausted spec from re-killing every restarted child at the
+    same hit count — while ``rearm=False`` specs are dropped.  The legacy
+    one-shot ``OPENCHK_INJECT_AT`` is always dropped.  Malformed values
+    warn and are dropped (the load_env contract).  Returns a new dict;
+    *env* is not mutated."""
+    out = dict(env)
+    out.pop(LEGACY_INJECT_ENV, None)
+    raw = out.get(CHAOS_ENV, "")
+    if not raw:
+        return out
+    try:
+        specs = _parse_specs(raw)
+    except (OSError, ValueError, TypeError) as e:
+        warnings.warn(
+            f"dropping malformed {CHAOS_ENV} on restart: {e}",
+            RuntimeWarning, stacklevel=2)
+        out.pop(CHAOS_ENV, None)
+        return out
+    keep = [s for s in specs if s.rearm]
+    if not keep:
+        out.pop(CHAOS_ENV, None)
+        out.pop(CHAOS_STATE_ENV, None)
+    elif len(keep) != len(specs):
+        out[CHAOS_ENV] = json.dumps([s.to_dict() for s in keep])
+    return out
 
 
 def legacy_inject_at(env: Optional[Dict[str, str]] = None) -> Optional[float]:
@@ -361,6 +527,7 @@ class SiteNames:
     TIER_COMMIT = "tier.commit"  # ctx: tier, level, ckpt_id, rank
     OBJSTORE_PUT = "objstore.put"  # ctx: key
     OBJSTORE_GET = "objstore.get"  # ctx: key
+    OBJSTORE_DELETE = "objstore.delete"  # ctx: key (GC sweep deletes)
     CHUNK_EMIT = "chunkstream.emit"  # ctx: name, seq
     HEARTBEAT = "heartbeat.beat"  # ctx: step
     DEPLOY_POLL = "deploy.poll"  # ctx: replica

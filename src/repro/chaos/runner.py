@@ -8,9 +8,13 @@ loss — the CI chaos lane gates on it.  The report is machine-readable:
 
     {"scenarios": [{"name": ..., "backend": ..., "ok": true,
                     "faults_fired": 2, "recovery_path": "partner",
-                    "recovery_s": 0.04, "data_loss_bytes": 0,
-                    "detail": {...}}, ...],
-     "total": 15, "passed": 15, "data_loss_bytes": 0, "ok": true}
+                    "recovery_s": 0.04, "mttr_s": 0.04,
+                    "data_loss_bytes": 0, "detail": {...}}, ...],
+     "total": 24, "passed": 24, "data_loss_bytes": 0,
+     "max_mttr_s": 0.31, "ok": true}
+
+``--include-supervised`` adds the real multi-process kill/restart
+scenario (spawns ``launch/train.py --supervise`` workers; slow).
 """
 from __future__ import annotations
 
@@ -19,7 +23,8 @@ import json
 import sys
 import tempfile
 
-from repro.chaos.scenarios import BACKENDS, SCENARIOS, run_matrix
+from repro.chaos.scenarios import (BACKENDS, SCENARIOS, SUPERVISED,
+                                   run_matrix)
 
 
 def main(argv=None) -> int:
@@ -28,18 +33,24 @@ def main(argv=None) -> int:
                     help="scratch dir (default: a fresh temp dir)")
     ap.add_argument("--backend", action="append", choices=BACKENDS,
                     help="restrict to backend(s); repeatable")
-    ap.add_argument("--scenario", action="append", choices=sorted(SCENARIOS),
+    ap.add_argument("--scenario", action="append",
+                    choices=sorted(SCENARIOS) + sorted(SUPERVISED),
                     help="restrict to scenario(s); repeatable")
+    ap.add_argument("--include-supervised", action="store_true",
+                    help="also run the supervised multi-process "
+                         "kill/restart scenario (slow)")
     ap.add_argument("--out", default=None, help="write JSON report here")
     args = ap.parse_args(argv)
 
     backends = tuple(args.backend) if args.backend else BACKENDS
     names = args.scenario or None
     if args.workdir:
-        report = run_matrix(args.workdir, backends, names)
+        report = run_matrix(args.workdir, backends, names,
+                            include_supervised=args.include_supervised)
     else:
         with tempfile.TemporaryDirectory(prefix="openchk-chaos-") as d:
-            report = run_matrix(d, backends, names)
+            report = run_matrix(d, backends, names,
+                                include_supervised=args.include_supervised)
 
     text = json.dumps(report, indent=2, sort_keys=True)
     if args.out:
@@ -47,11 +58,12 @@ def main(argv=None) -> int:
             f.write(text + "\n")
     for r in report["scenarios"]:
         print(f"[chaos] {'PASS' if r['ok'] else 'FAIL'} "
-              f"{r['name']:<22s} {r['backend']:<6s} "
-              f"via={r['recovery_path']:<9s} faults={r['faults_fired']} "
-              f"loss={r['data_loss_bytes']}B {r['recovery_s']:.3f}s")
+              f"{r['name']:<24s} {r['backend']:<6s} "
+              f"via={r['recovery_path']:<10s} faults={r['faults_fired']} "
+              f"loss={r['data_loss_bytes']}B mttr={r['mttr_s']:.3f}s")
     print(f"[chaos] {report['passed']}/{report['total']} passed, "
-          f"total data loss {report['data_loss_bytes']} bytes")
+          f"total data loss {report['data_loss_bytes']} bytes, "
+          f"max mttr {report['max_mttr_s']:.3f}s")
     if not report["ok"]:
         for r in report["scenarios"]:
             if not r["ok"]:

@@ -30,13 +30,36 @@ The matrix (× fti/scr/veloc backends):
                           transit: digest verification rejects it (no
                           silent bad bits), the retry restores bit-exact
 
+Compound scenarios overlap two faults at once — the regime where a
+checkpoint library's recovery paths actually interact:
+
+    node-loss-during-outage   a node dies while the bucket is dark:
+                          partner recovery works mid-outage, and the
+                          post-outage bucket alone restores everything
+    corrupt-chunk-straggler   one store is both slow (straggling upload)
+                          and silently corrupted pre-digest; restore
+                          rejects the poisoned container and falls back
+                          one id, bit-exact
+    heartbeat-loss-mid-gc a worker goes silent exactly while the
+                          retention GC dies mid-sweep; the stale mark
+                          resumes safely and the heartbeat gap registers
+                          as a real MTBF failure observation
+
+``supervised-kill`` (in :data:`SUPERVISED`, spawned on demand) runs the
+real multi-process path: ``launch/train.py --supervise`` workers killed
+by an ``OPENCHK_CHAOS`` exit spec, asserting kill-detect → backoff →
+resume-from-checkpoint with restart-durable fault counters.
+
 Reports are machine-readable dicts: faults fired, recovery path taken,
-recovery wall time, data loss in bytes.
+recovery wall time, MTTR, data loss in bytes.
 """
 from __future__ import annotations
 
+import json
 import os
 import shutil
+import subprocess
+import sys
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
@@ -45,13 +68,16 @@ import numpy as np
 
 from repro.backends.registry import make_backend
 from repro.chaos import inject as chaos
+from repro.chaos.cadence import MTBFEstimator
 from repro.core import manifest as mf
 from repro.core.comm import LocalComm, SimulatedCluster
 from repro.core.resharding import save_sharded
 from repro.core.storage import CHK_FULL, StorageConfig
+from repro.ft.detector import Heartbeat
 from repro.ft.elastic import rescale_restore
 from repro.ft.straggler import commit_if_quorum, validate_quorum
 from repro.objstore.client import ObjectStoreError
+from repro.objstore.gc import GC_MARK_KEY
 from repro.redundancy.groups import Topology
 
 BACKENDS = ("fti", "scr", "veloc")
@@ -67,6 +93,9 @@ class ScenarioResult:
     recovery_path: str
     recovery_s: float
     data_loss_bytes: int
+    #: mean time to repair — death/fault detection to verified recovery;
+    #: defaults to recovery_s for scenarios whose restore walk IS the repair
+    mttr_s: Optional[float] = None
     detail: Dict[str, Any] = field(default_factory=dict)
 
     def to_dict(self) -> Dict[str, Any]:
@@ -75,17 +104,22 @@ class ScenarioResult:
             "faults_fired": self.faults_fired,
             "recovery_path": self.recovery_path,
             "recovery_s": round(self.recovery_s, 4),
+            "mttr_s": round(self.mttr_s if self.mttr_s is not None
+                            else self.recovery_s, 4),
             "data_loss_bytes": self.data_loss_bytes,
             "detail": self.detail,
         }
 
 
 SCENARIOS: Dict[str, Callable[[str, str], ScenarioResult]] = {}
+#: scenarios that spawn real supervised worker processes — opt-in (slow),
+#: run once (not per backend matrix cell) via ``--include-supervised``
+SUPERVISED: Dict[str, Callable[[str, str], ScenarioResult]] = {}
 
 
-def scenario(name: str):
+def scenario(name: str, table: Optional[Dict[str, Callable]] = None):
     def deco(fn):
-        SCENARIOS[name] = fn
+        (SCENARIOS if table is None else table)[name] = fn
         fn.scenario_name = name
         return fn
     return deco
@@ -377,12 +411,243 @@ def corrupt_chunk(workdir: str, backend: str) -> ScenarioResult:
                 "silent_corruption": silent_corruption})
 
 
+# -- compound scenarios (two overlapping faults) ----------------------------
+@scenario("node-loss-during-outage")
+def node_loss_during_outage(workdir: str, backend: str) -> ScenarioResult:
+    """Node 2 dies *while* the bucket is dark: a degraded L4 store loses
+    nothing, the victim restores mid-outage from its partner replica, and
+    once the outage lifts the bucket alone restores a post-outage store."""
+    cluster, cfg, backends, kw = _cluster_backends(workdir, backend)
+    _store_all(backends, 1, level=4)          # all ranks published to bucket
+    _store_all(backends, 2, level=2)          # local + partner only
+    chaos.arm("objstore.*", mode="error", every=1, times=None)
+    store_degraded = False
+    try:                                      # L4 store mid-outage degrades
+        backends[3].tcl_store(_payload(3, 3), 3, 4, CHK_FULL)
+        backends[3].tcl_wait()
+    except Exception:
+        store_degraded = True
+    cluster.kill_node(2)                      # second fault, same window
+    t0 = time.time()
+    b2 = _restart_backend(cfg, cluster.comms[2], backend, kw)
+    got_mid = b2.engine.load_latest()
+    mttr = time.time() - t0
+    named_mid, meta_mid = got_mid if got_mid is not None else (None, {})
+    loss_mid = _loss_bytes(_payload(2, 2), named_mid)
+    partner_ok = meta_mid.get("recovered_via") == "partner"
+    # outage ends: a fresh publish must make the bucket whole again
+    chaos.registry().disarm_all()
+    backends[0].tcl_store(_payload(0, 4), 4, 4, CHK_FULL)
+    backends[0].tcl_wait()
+    for c in cluster.comms:                   # bucket is the only survivor
+        shutil.rmtree(c.node_local_dir, ignore_errors=True)
+        os.makedirs(c.node_local_dir, exist_ok=True)
+    shutil.rmtree(cfg.global_root, ignore_errors=True)
+    b0 = _restart_backend(cfg, cluster.comms[0], backend, kw)
+    got = b0.engine.load_latest()
+    dt = time.time() - t0
+    named, meta = got if got is not None else (None, {})
+    loss = _loss_bytes(_payload(0, 4), named)
+    ok = (store_degraded and partner_ok and loss_mid == 0 and loss == 0
+          and meta.get("recovered_via") == "objstore")
+    return ScenarioResult(
+        "node-loss-during-outage", backend, ok,
+        faults_fired=chaos.registry().fired_count(),
+        recovery_path=str(meta.get("recovered_via")), recovery_s=dt,
+        data_loss_bytes=loss + loss_mid, mttr_s=mttr,
+        detail={"store_degraded_not_lost": store_degraded and loss_mid == 0,
+                "mid_outage_recovery": str(meta_mid.get("recovered_via"))})
+
+
+@scenario("corrupt-chunk-straggler")
+def corrupt_chunk_straggler(workdir: str, backend: str) -> ScenarioResult:
+    """One store is slow AND silently poisoned: a straggling upload plus a
+    pre-digest chunk corruption (the chunk digest *matches* the bad bytes,
+    so transport verification cannot catch it).  Restore-side container
+    verification rejects the poisoned id and the walk falls back one id
+    with zero loss vs the last good commit."""
+    cfg = StorageConfig(root=os.path.join(workdir, "shared"), group_size=1)
+    comm = LocalComm(os.path.join(workdir, "node-local"))
+    kw = {"dedicated_thread": False} if backend == "fti" else {}
+    b = make_backend(cfg, comm, backend, **kw)
+    b.tcl_store(_payload(0, 1), 1, 4, CHK_FULL)   # the last good commit
+    b.tcl_wait()
+    # both faults hit id=2's store: the payload bytes flip BEFORE the
+    # transport digest sees them — pre-digest on the streamed chunk path
+    # (fused-pack backends), at-put for backends that upload staged files
+    # — and one chunk upload straggles.  Only NEW chunks upload (dedup),
+    # so id=1's published chunks cannot be the poisoned ones.
+    chaos.arm("chunkstream.emit", mode="corrupt", times=1)
+    chaos.arm("objstore.put", mode="corrupt", times=1)
+    chaos.arm("objstore.put", mode="delay", delay_s=0.05, times=1)
+    b.tcl_store(_payload(0, 2), 2, 4, CHK_FULL)   # "succeeds" — poisoned
+    b.tcl_wait()
+    poisoned = (chaos.registry().fired_count("chunkstream.emit")
+                + chaos.registry().fired_count("objstore.put")) >= 2
+    chaos.registry().disarm_all()
+    # bucket is the only source; the poisoned id=2 must not restore
+    shutil.rmtree(comm.node_local_dir, ignore_errors=True)
+    os.makedirs(comm.node_local_dir, exist_ok=True)
+    shutil.rmtree(cfg.global_root, ignore_errors=True)
+    t0 = time.time()
+    b2 = _restart_backend(cfg, comm, backend, kw)
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("ignore", RuntimeWarning)   # the expected fallback
+        got = b2.engine.load_latest()
+    dt = time.time() - t0
+    named, meta = got if got is not None else (None, {})
+    loss = _loss_bytes(_payload(0, 1), named)
+    silent_corruption = (named is not None
+                         and _loss_bytes(_payload(0, 2), named) == 0)
+    ok = (poisoned and not silent_corruption and loss == 0
+          and meta.get("id") == 1
+          and meta.get("recovered_via") == "objstore")
+    return ScenarioResult(
+        "corrupt-chunk-straggler", backend, ok,
+        faults_fired=chaos.registry().fired_count(),
+        recovery_path=str(meta.get("recovered_via")), recovery_s=dt,
+        data_loss_bytes=loss, mttr_s=dt,
+        detail={"poisoned_store": poisoned,
+                "fell_back_to_id": meta.get("id"),
+                "silent_corruption": silent_corruption})
+
+
+@scenario("heartbeat-loss-mid-gc")
+def heartbeat_loss_mid_gc(workdir: str, backend: str) -> ScenarioResult:
+    """The worker goes silent exactly while retention GC dies mid-sweep:
+    the stale GC mark resumes safely on the next store (never deleting a
+    live chunk), the silent span registers as a *real* failure in the
+    MTBF estimator, and the surviving newest id restores bit-exact."""
+    cfg = StorageConfig(root=os.path.join(workdir, "shared"), group_size=1,
+                        objstore_keep_last=2)
+    comm = LocalComm(os.path.join(workdir, "node-local"))
+    kw = {"dedicated_thread": False} if backend == "fti" else {}
+    b = make_backend(cfg, comm, backend, **kw)
+    hb = Heartbeat(os.path.join(workdir, "heartbeat"))
+    est = MTBFEstimator(prior_mtbf_s=3600.0, gap_failure_s=0.2)
+    hb.beat(1)
+    est.note_progress()
+    b.tcl_store(_payload(0, 1), 1, 4, CHK_FULL)
+    b.tcl_wait()
+    b.tcl_store(_payload(0, 2), 2, 4, CHK_FULL)
+    b.tcl_wait()
+    # both faults in one window: heartbeat writes stop landing, and the
+    # GC sweep triggered by id=3's commit (which retires id=1) dies on
+    # its first chunk delete — AFTER the id=3 entry is durable
+    chaos.arm("heartbeat.beat", mode="skip", every=1, times=None)
+    chaos.arm("objstore.delete", mode="error", at=1)
+    gc_died = False
+    try:
+        b.tcl_store(_payload(0, 3), 3, 4, CHK_FULL)
+        b.tcl_wait()
+    except Exception:
+        gc_died = True
+    time.sleep(0.25)                          # the silent span
+    hb.beat(3)                                # skipped — never lands
+    est.note_progress()                       # gap > gap_failure_s
+    stale = hb.stale_s()
+    chaos.registry().disarm_all()
+    t0 = time.time()
+    b.tcl_store(_payload(0, 4), 4, 4, CHK_FULL)   # resumes the stale mark
+    b.tcl_wait()
+    tier = b.engine.objstore_tier()
+    mark_cleared = tier.store.get_with_etag(GC_MARK_KEY)[0] is None
+    shutil.rmtree(comm.node_local_dir, ignore_errors=True)
+    os.makedirs(comm.node_local_dir, exist_ok=True)
+    shutil.rmtree(cfg.global_root, ignore_errors=True)
+    b2 = _restart_backend(cfg, comm, backend, kw)
+    got = b2.engine.load_latest()
+    dt = time.time() - t0
+    named, meta = got if got is not None else (None, {})
+    loss = _loss_bytes(_payload(0, 4), named)
+    mtbf_moved = est.failures >= 1 and est.estimate() < est.prior_mtbf_s
+    ok = (gc_died and mark_cleared and mtbf_moved and loss == 0
+          and stale is not None and stale >= 0.25
+          and meta.get("recovered_via") == "objstore")
+    return ScenarioResult(
+        "heartbeat-loss-mid-gc", backend, ok,
+        faults_fired=chaos.registry().fired_count(),
+        recovery_path=str(meta.get("recovered_via")), recovery_s=dt,
+        data_loss_bytes=loss, mttr_s=dt,
+        detail={"gc_died_mid_sweep": gc_died,
+                "stale_mark_cleared": mark_cleared,
+                "heartbeat_stale_s": round(stale or -1.0, 3),
+                "mtbf_failures": est.failures,
+                "mtbf_estimate_s": round(est.estimate(), 1)})
+
+
+# -- supervised multi-process scenario ---------------------------------------
+@scenario("supervised-kill", table=SUPERVISED)
+def supervised_kill(workdir: str, backend: str) -> ScenarioResult:
+    """Real kill/restart supervision: spawn ``launch/train.py --supervise``
+    with an ``OPENCHK_CHAOS`` exit spec that hard-kills the worker at step
+    8 (checkpoints at 3 and 6).  Asserts kill-detect → backoff → resume
+    from the last checkpoint (never step 0), that the restart-durable
+    fault counters keep the exhausted spec from re-killing the restarted
+    child, and that the supervisor's MTBF feed recorded the real death."""
+    ckpt_dir = os.path.join(workdir, "ckpt")
+    os.makedirs(ckpt_dir, exist_ok=True)
+    import repro
+    src = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
+    spec = chaos.FaultSpec(site="train.step", mode="exit", every=8, times=1)
+    state_path = os.path.join(ckpt_dir, "chaos-state.json")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.update(chaos.env_for_specs([spec], state_path=state_path))
+    cmd = [sys.executable, "-m", "repro.launch.train", "--supervise",
+           "--arch", "tinyllama-1.1b", "--steps", "12", "--batch", "2",
+           "--seq", "32", "--ckpt-every", "3", "--no-dedicated-thread",
+           "--ckpt-dir", ckpt_dir, "--restart-backoff", "0.2",
+           "--restart-backoff-max", "1.0", "--backend", backend]
+    t0 = time.time()
+    p = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=420)
+    dt = time.time() - t0
+    out = p.stdout + p.stderr
+    resumed = "resuming from step 6" in out
+    restarted_once = "attempt 2" in out and "attempt 3" not in out
+    backed_off = "backing off" in out
+    finished = "'final_step': 12" in out
+    fired_total = 0
+    try:
+        with open(state_path, "r", encoding="utf-8") as f:
+            fired_total = sum(int(v.get("fired", 0))
+                              for v in json.load(f).values())
+    except (OSError, ValueError, AttributeError):
+        pass
+    feed: Dict[str, Any] = {}
+    try:
+        with open(os.path.join(ckpt_dir, "mtbf-feed.json"),
+                  encoding="utf-8") as f:
+            feed = json.load(f)
+    except (OSError, ValueError):
+        pass
+    feed_ok = (feed.get("deaths") == 1 and feed.get("failures", 0) >= 1
+               and feed.get("estimate_s", 1e18) < 3600.0
+               and len(feed.get("mttr_s") or []) == 1)
+    mttr = (feed.get("mttr_s") or [dt])[0]
+    ok = (p.returncode == 0 and resumed and restarted_once and backed_off
+          and finished and fired_total == 1 and feed_ok)
+    return ScenarioResult(
+        "supervised-kill", backend, ok,
+        faults_fired=fired_total,
+        recovery_path="supervised", recovery_s=dt,
+        data_loss_bytes=0 if (resumed and finished) else -1, mttr_s=mttr,
+        detail={"returncode": p.returncode, "resumed_from_step_6": resumed,
+                "exactly_one_restart": restarted_once,
+                "backoff_paced": backed_off, "finished": finished,
+                "state_fired": fired_total, "feed": feed})
+
+
 def run_scenario(name: str, backend: str, workdir: str) -> ScenarioResult:
     """Run one scenario with a clean chaos registry, always disarming."""
     chaos.reset()
     os.makedirs(workdir, exist_ok=True)
     try:
-        return SCENARIOS[name](workdir, backend)
+        fn = SCENARIOS.get(name) or SUPERVISED[name]
+        return fn(workdir, backend)
     except Exception as e:  # a crashed scenario is a failed scenario
         return ScenarioResult(
             name, backend, False,
@@ -395,11 +660,22 @@ def run_scenario(name: str, backend: str, workdir: str) -> ScenarioResult:
 
 def run_matrix(workdir: str,
                backends=BACKENDS,
-               names: Optional[List[str]] = None) -> Dict[str, Any]:
-    """The full scenario × backend matrix → machine-readable report."""
+               names: Optional[List[str]] = None,
+               include_supervised: bool = False) -> Dict[str, Any]:
+    """The full scenario × backend matrix → machine-readable report.
+
+    Supervised scenarios spawn real worker processes, so they run once
+    (first backend) instead of per matrix cell, and only when named
+    explicitly or requested via *include_supervised*."""
     names = list(names or SCENARIOS)
+    if include_supervised:
+        names += [n for n in SUPERVISED if n not in names]
     results = []
     for n in names:
+        if n in SUPERVISED:
+            d = os.path.join(workdir, f"{n}-{backends[0]}")
+            results.append(run_scenario(n, backends[0], d))
+            continue
         for be in backends:
             d = os.path.join(workdir, f"{n}-{be}")
             results.append(run_scenario(n, be, d))
@@ -408,5 +684,8 @@ def run_matrix(workdir: str,
         "total": len(results),
         "passed": sum(r.ok for r in results),
         "data_loss_bytes": sum(r.data_loss_bytes for r in results),
+        "max_mttr_s": round(max(
+            (r.mttr_s if r.mttr_s is not None else r.recovery_s)
+            for r in results), 4) if results else 0.0,
         "ok": all(r.ok for r in results),
     }

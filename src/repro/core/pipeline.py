@@ -37,6 +37,7 @@ import io
 import os
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -700,7 +701,17 @@ class CheckpointPipeline:
         for i, root in self.available_ids():
             by_id.setdefault(i, []).append(root)
         for ckpt_id in sorted(by_id, reverse=True):
-            got = self._try_restore(ckpt_id, by_id, rank)
+            try:
+                got = self._try_restore(ckpt_id, by_id, rank)
+            except Exception as e:
+                # a checkpoint whose container fails to parse/verify (e.g.
+                # pre-digest corruption that stored a matching chunk digest)
+                # must not abort the walk — fall back to the next-older id
+                warnings.warn(
+                    f"checkpoint {ckpt_id} unrestorable "
+                    f"({type(e).__name__}: {e}); falling back to older id",
+                    RuntimeWarning)
+                continue
             if got is not None:
                 named, meta = got
                 if not lazy_sharded:

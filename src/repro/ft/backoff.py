@@ -38,6 +38,16 @@ class ExponentialBackoff:
     def reset(self) -> None:
         self.failures = 0
 
+    def note_healthy_span(self, span_s: float, reset_after_s: float) -> bool:
+        """Forget past failures once the caller has stayed healthy for
+        *span_s* >= *reset_after_s* — one early crash must not tax every
+        later restart at full exponential price.  Returns True iff the
+        counter was actually reset."""
+        if self.failures and span_s >= reset_after_s:
+            self.reset()
+            return True
+        return False
+
     def sleep_after_failure(self, sleep_fn=time.sleep) -> float:
         d = self.failed()
         if d > 0:

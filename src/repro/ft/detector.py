@@ -46,6 +46,11 @@ class Heartbeat:
         except (OSError, ValueError, IndexError):
             return None
 
+    def stale_s(self) -> Optional[float]:
+        """Seconds since the last beat landed (None if none ever did)."""
+        t = self.last()
+        return None if t is None else time.time() - t
+
 
 @dataclass
 class HeartbeatMonitor:
@@ -53,5 +58,5 @@ class HeartbeatMonitor:
     timeout: float = 60.0
 
     def alive(self) -> bool:
-        t = self.hb.last()
-        return t is not None and (time.time() - t) < self.timeout
+        s = self.hb.stale_s()
+        return s is not None and s < self.timeout

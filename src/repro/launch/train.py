@@ -52,9 +52,16 @@ def worker(args) -> int:
 
     cadence = None
     if args.cadence:
-        from repro.chaos.cadence import CadenceConfig, CadenceController
+        from repro.chaos.cadence import (
+            CadenceConfig, CadenceController, MTBFFeed)
         cadence = CadenceController(CadenceConfig(
-            prior_mtbf_s=args.cadence_mtbf))
+            prior_mtbf_s=args.cadence_mtbf,
+            gap_failure_s=args.heartbeat_timeout))
+        # the supervisor's live failure record (real worker deaths +
+        # heartbeat-gap kills): a restarted worker resumes from observed
+        # MTBF reality instead of the prior
+        MTBFFeed(os.path.join(args.ckpt_dir, "mtbf-feed.json")).seed(
+            cadence.mtbf)
 
     loop = LoopConfig(
         total_steps=args.steps,
@@ -63,6 +70,7 @@ def worker(args) -> int:
         levels=LevelSchedule(),
         heartbeat_path=os.path.join(args.ckpt_dir, "heartbeat"),
         cadence=cadence,
+        gap_failure_s=args.heartbeat_timeout,
     )
     try:
         summary = run_training(model, step_fn, state, ckpt, loop,
@@ -75,9 +83,16 @@ def worker(args) -> int:
 
 
 def supervise(args) -> int:
-    """Restart launcher: run worker until success, restarting on failure."""
-    from repro.ft.backoff import ExponentialBackoff
-    from repro.ft.detector import Heartbeat, HeartbeatMonitor
+    """Restart launcher: run worker until success, restarting on failure.
+
+    Thin wrapper over :class:`repro.ft.supervisor.Supervisor` — the
+    kill-detect / startup-grace / backoff-reset / MTBF-feed policy lives
+    (and is unit-tested) there.  Chaos specs survive restarts with
+    spec-declared ``rearm`` semantics: their durable counters
+    (``OPENCHK_CHAOS_STATE``, defaulted into the checkpoint dir) keep an
+    exhausted kill spec from re-killing every restarted child."""
+    from repro.chaos import inject
+    from repro.ft.supervisor import Supervisor, SupervisorConfig
 
     cmd = [sys.executable, "-m", "repro.launch.train"] + [
         a for a in sys.argv[1:] if a not in ("--supervise",)]
@@ -86,43 +101,21 @@ def supervise(args) -> int:
         env["OPENCHK_INJECT_AT"] = str(args.inject_at)
         cmd = [c for c in cmd if not c.startswith("--inject-at")
                and c != str(args.inject_at)]
-    hb = Heartbeat(os.path.join(args.ckpt_dir, "heartbeat"))
-    # same policy as the deployer's pinned-replica retries: a crash-looping
-    # worker must not hammer the shared tiers at full speed
-    backoff = ExponentialBackoff(base_s=args.restart_backoff,
-                                 max_s=args.restart_backoff_max)
-    attempts = 0
-    while attempts < args.max_restarts + 1:
-        attempts += 1
-        print(f"[supervisor] attempt {attempts}")
-        p = subprocess.Popen(cmd, env=env)
-        monitor = HeartbeatMonitor(hb, timeout=args.heartbeat_timeout)
-        while True:
-            rc = p.poll()
-            if rc is not None:
-                break
-            time.sleep(1.0)
-            if hb.last() is not None and not monitor.alive():
-                print("[supervisor] heartbeat timeout → killing worker")
-                p.kill()
-                rc = p.wait()
-                break
-        if rc == 0:
-            print(f"[supervisor] success after {attempts} attempt(s)")
-            return 0
-        print(f"[supervisor] worker died rc={rc} "
-              f"(last step {hb.last_step()}); restarting from checkpoint")
-        # fault fired; clean restarts — a chaos spec left armed would kill
-        # every restarted child at the same hit count (scenario runs that
-        # want repeated harassment use repro.chaos.runner, not --supervise)
-        env.pop("OPENCHK_INJECT_AT", None)
-        env.pop("OPENCHK_CHAOS", None)
-        delay = backoff.failed()
-        if delay > 0:
-            print(f"[supervisor] backing off {delay:.1f}s before restart")
-            time.sleep(delay)
-    print("[supervisor] giving up")
-    return 1
+    if env.get(inject.CHAOS_ENV) and not env.get(inject.CHAOS_STATE_ENV):
+        env[inject.CHAOS_STATE_ENV] = os.path.join(
+            args.ckpt_dir, "chaos-state.json")
+    sup = Supervisor(cmd, env, SupervisorConfig(
+        heartbeat_path=os.path.join(args.ckpt_dir, "heartbeat"),
+        heartbeat_timeout_s=args.heartbeat_timeout,
+        startup_grace_s=args.startup_grace,
+        healthy_reset_s=args.healthy_reset,
+        max_restarts=args.max_restarts,
+        backoff_base_s=args.restart_backoff,
+        backoff_max_s=args.restart_backoff_max,
+        mtbf_feed_path=os.path.join(args.ckpt_dir, "mtbf-feed.json"),
+        prior_mtbf_s=args.cadence_mtbf,
+    ))
+    return sup.run()
 
 
 def main() -> int:
@@ -150,6 +143,13 @@ def main() -> int:
                     help="base seconds between restart attempts (doubles "
                          "per consecutive failure)")
     ap.add_argument("--restart-backoff-max", type=float, default=30.0)
+    ap.add_argument("--startup-grace", type=float, default=None,
+                    help="kill a worker that never beats within this many "
+                         "seconds (default: 2x --heartbeat-timeout)")
+    ap.add_argument("--healthy-reset", type=float, default=None,
+                    help="forget restart-backoff failures after the worker "
+                         "stays healthy this long (default: "
+                         "--heartbeat-timeout)")
     ap.add_argument("--cadence", action="store_true",
                     help="Daly-optimal adaptive checkpoint cadence instead "
                          "of the fixed --ckpt-every cycle")

@@ -168,6 +168,11 @@ class MemoryObjectStore(ObjectStore):
             return sorted(k for k in self._objects if k.startswith(prefix))
 
     def delete(self, key):
+        # chaos site: GC sweeps die here mid-delete; "skip" models a
+        # delete that silently never lands (orphaned chunk)
+        if chaos.fire(chaos.SITES.OBJSTORE_DELETE, exc=ObjectStoreError,
+                      key=key).skipped:
+            return
         with self._lock:
             self._objects.pop(key, None)
 
@@ -308,6 +313,9 @@ class LocalFSObjectStore(ObjectStore):
         return sorted(out)
 
     def delete(self, key):
+        if chaos.fire(chaos.SITES.OBJSTORE_DELETE, exc=ObjectStoreError,
+                      key=key).skipped:
+            return
         try:
             os.remove(self._path(key))
         except FileNotFoundError:

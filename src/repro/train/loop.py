@@ -61,6 +61,11 @@ class LoopConfig:
     #: and its online MTBF estimate — L1 stays frequent (tiny delta), L4
     #: tracks the Daly optimum.
     cadence: Optional[CadenceController] = None
+    #: treat a silent gap longer than this between observed steps as a
+    #: failure in the cadence controller's MTBF estimator (wired from the
+    #: launcher's --heartbeat-timeout so worker and supervisor agree on
+    #: what "hung" means)
+    gap_failure_s: Optional[float] = None
 
 
 def run_training(
@@ -81,6 +86,9 @@ def run_training(
     cadence = loop.cadence
     if cadence is not None:
         ckpt.observe_store_reports(cadence.note_report)  # store-cost feed
+        if loop.gap_failure_s is not None and \
+                cadence.mtbf.gap_failure_s is None:
+            cadence.mtbf.gap_failure_s = loop.gap_failure_s
 
     # ---- chk load: transparent restart ---------------------------------- #
     t_load = time.time()
@@ -113,7 +121,7 @@ def run_training(
         if cadence is not None:
             cadence.note_step()
             cadence.ingest_chaos_history()
-            due = cadence.due_levels()
+            due = cadence.due_levels(kind=loop.kind)
             is_ckpt = bool(due)
             if is_ckpt:
                 n_ckpts += 1

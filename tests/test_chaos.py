@@ -385,3 +385,215 @@ def test_find_latest_sharded_falls_back_past_dead_catalog(tmp_path):
     chaos.arm("objstore.*", mode="error", every=1, times=None)
     got = find_latest_sharded([cfg.global_root], tiers=[tier])
     assert got is not None and got[1] == 3     # catalog dark → dir id wins
+
+
+# -- restart-durable chaos state ---------------------------------------------
+def _state_env(specs, state_path):
+    return chaos.env_for_specs(specs, state_path=str(state_path))
+
+
+def test_state_file_persists_counters_across_registries(tmp_path):
+    spec = FaultSpec(site="s", mode="error", at=3, times=1)
+    env = _state_env([spec], tmp_path / "state.json")
+    reg1 = ChaosRegistry(env=env)
+    assert reg1.fire("s").fired == 0           # hit 1
+    assert reg1.fire("s").fired == 0           # hit 2 — persisted
+    reg2 = ChaosRegistry(env=env)              # the restarted process
+    with pytest.raises(InjectedFault):
+        reg2.fire("s")                         # hit 3, not hit 1
+    reg3 = ChaosRegistry(env=env)              # spec now exhausted
+    assert reg3.fire("s").fired == 0
+    blob = json.loads((tmp_path / "state.json").read_text())
+    (st,) = blob.values()
+    assert st["hits"] == 3 and st["fired"] == 1
+
+
+def test_prob_spec_rng_state_round_trips(tmp_path):
+    mk = lambda: FaultSpec(site="s", mode="skip", prob=0.5, seed=7,
+                           times=None)
+    ref = mk()                                 # uninterrupted reference
+    want = [ref.should_fire() for _ in range(20)]
+    env = _state_env([mk()], tmp_path / "state.json")
+    reg1 = ChaosRegistry(env=env)
+    got = [reg1.fire("s").skipped for _ in range(10)]
+    reg2 = ChaosRegistry(env=env)              # resumes the RNG stream
+    got += [reg2.fire("s").skipped for _ in range(10)]
+    assert got == want
+
+
+def test_malformed_state_file_warns_never_raises(tmp_path):
+    p = tmp_path / "state.json"
+    spec = FaultSpec(site="s", at=1)
+    bad_counters = json.dumps({spec.state_key(): {"hits": "wat"}})
+    for bad in ("not json", "[1, 2]", bad_counters):
+        p.write_text(bad)
+        env = _state_env([FaultSpec(site="s", at=1)], p)
+        reg = ChaosRegistry(env=env)
+        with pytest.warns(RuntimeWarning):
+            assert reg.load_env() == 1         # spec armed, counters zeroed
+        with pytest.raises(InjectedFault):
+            reg.fire("s")                      # still fires on hit 1
+    # a state key that matches no armed spec is simply ignored (it may
+    # belong to a sibling process's spec set)
+    p.write_text('{"deadbeef": {"hits": 5}}')
+    reg = ChaosRegistry(env=_state_env([FaultSpec(site="s", at=1)], p))
+    assert reg.load_env() == 1
+    with pytest.raises(InjectedFault):
+        reg.fire("s")
+
+
+def test_rearm_flag_serialization_round_trips():
+    assert "rearm" not in FaultSpec(site="s").to_dict()   # default stays
+    d = FaultSpec(site="s", rearm=False).to_dict()
+    assert d["rearm"] is False
+    assert FaultSpec.from_dict(d).rearm is False
+    assert FaultSpec.from_dict({"site": "s"}).rearm is True
+
+
+def test_restart_env_applies_rearm_semantics(tmp_path):
+    keep = FaultSpec(site="train.step", mode="exit", every=8)
+    drop = FaultSpec(site="objstore.*", mode="error", rearm=False)
+    env = _state_env([keep, drop], tmp_path / "st.json")
+    env[chaos.LEGACY_INJECT_ENV] = "0.9"
+    out = chaos.restart_env(env)
+    assert chaos.LEGACY_INJECT_ENV not in out  # one-shot legacy fault
+    assert json.loads(out[chaos.CHAOS_ENV]) == [keep.to_dict()]
+    assert out[chaos.CHAOS_STATE_ENV] == str(tmp_path / "st.json")
+    # all rearm=False → both chaos vars drop
+    out2 = chaos.restart_env(_state_env([drop], tmp_path / "st.json"))
+    assert chaos.CHAOS_ENV not in out2 and chaos.CHAOS_STATE_ENV not in out2
+    # malformed spec JSON → warn, drop, never raise
+    with pytest.warns(RuntimeWarning):
+        out3 = chaos.restart_env({chaos.CHAOS_ENV: "not json"})
+    assert chaos.CHAOS_ENV not in out3
+    assert chaos.restart_env({}) == {}
+
+
+def test_exit_spec_kills_child_n_but_not_child_n_plus_1(tmp_path):
+    """The tentpole contract end to end: a repeating exit spec kills the
+    child whose hit count reaches the trigger, and the durable state file
+    keeps it from re-killing the next child at the same count."""
+    import subprocess
+    import sys
+
+    import repro
+    src = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.update(_state_env(
+        [FaultSpec(site="train.step", mode="exit", every=2, times=1)],
+        tmp_path / "state.json"))
+    script = ("from repro.chaos import inject as chaos\n"
+              "for i in range(2):\n"
+              "    chaos.fire('train.step', step=i)\n"
+              "print('CLEAN')\n")
+    p1 = subprocess.run([sys.executable, "-c", script], env=env,
+                        capture_output=True, text=True, timeout=60)
+    assert p1.returncode == chaos.EXIT_CODE and "CLEAN" not in p1.stdout
+    p2 = subprocess.run([sys.executable, "-c", script], env=env,
+                        capture_output=True, text=True, timeout=60)
+    assert p2.returncode == 0 and "CLEAN" in p2.stdout
+    blob = json.loads((tmp_path / "state.json").read_text())
+    assert sum(v["fired"] for v in blob.values()) == 1
+
+
+# -- cadence-aware DIFF scheduling -------------------------------------------
+def test_kind_strings_mirror_core_protect():
+    from repro.chaos.cadence import CHK_DIFF_KIND, CHK_FULL_KIND
+    from repro.core.protect import CHK_DIFF, CHK_FULL
+    assert CHK_FULL_KIND == CHK_FULL and CHK_DIFF_KIND == CHK_DIFF
+
+
+def test_diff_interval_golden_vs_closed_form():
+    from repro.chaos.cadence import CHK_DIFF_KIND
+    ctl = CadenceController(CadenceConfig(max_interval_s=1e9))
+    for _ in range(8):
+        ctl.note_store(4, 20.0)
+        ctl.note_diff_store(4, 2.0, 0.10)
+    m = ctl.mtbf.estimate()
+    assert ctl.interval_for(4) == pytest.approx(daly_interval(20.0, m))
+    assert ctl.interval_for(4, kind=CHK_DIFF_KIND) == pytest.approx(
+        daly_interval(2.0, m))
+    assert ctl.interval_for(4, kind=CHK_DIFF_KIND) < ctl.interval_for(4)
+    sched = ctl.schedule(kind=CHK_DIFF_KIND)
+    assert sched[4] == ctl.interval_for(4, kind=CHK_DIFF_KIND)
+
+
+def test_diff_interval_collapses_to_full_past_promote_threshold():
+    from repro.chaos.cadence import CHK_DIFF_KIND
+    ctl = CadenceController(CadenceConfig(max_interval_s=1e9))
+    ctl.note_store(4, 20.0)
+    ctl.note_diff_store(4, 2.0, 0.99)          # dirty past break-even
+    assert ctl.diff_store_cost(4) == ctl.store_cost(4)
+    assert ctl.interval_for(4, kind=CHK_DIFF_KIND) == ctl.interval_for(4)
+
+
+def test_diff_dirty_ratio_scales_full_cost_when_unmeasured():
+    from repro.chaos.cadence import CHK_DIFF_KIND
+    ctl = CadenceController(CadenceConfig(max_interval_s=1e9))
+    ctl.note_store(4, 20.0)
+    ctl.note_diff_store(4, None, 0.25)         # ratio known, cost not
+    assert ctl.diff_store_cost(4) == pytest.approx(0.25 * 20.0)
+    assert ctl.interval_for(4, kind=CHK_DIFF_KIND) == pytest.approx(
+        daly_interval(5.0, ctl.mtbf.estimate()))
+    # nothing observed at all → never schedule cheaper than evidence
+    assert ctl.diff_store_cost(3) == ctl.store_cost(3)
+
+
+def test_note_report_routes_diff_vs_promoted_full():
+    from types import SimpleNamespace as NS
+    ctl = CadenceController()
+    ctl.note_report(NS(level=4, seconds=2.0, kind="DIFF",
+                       promoted_full=False, dirty_ratio=0.2))
+    assert ctl._costs[4].diff_store_s == 2.0 and ctl._costs[4].store_s is None
+    ctl.note_report(NS(level=4, seconds=21.0, kind="DIFF",
+                       promoted_full=True, dirty_ratio=0.98))
+    assert ctl._costs[4].store_s == 21.0       # promoted = FULL pricing
+    assert ctl._costs[4].diff_store_s == 2.0   # DIFF EWMA untouched
+    assert ctl._costs[4].dirty_ratio > 0.2     # but the evidence lands
+    ctl.note_report(NS(level=4, seconds=20.0, kind="FULL",
+                       promoted_full=False, dirty_ratio=None))
+    assert ctl._costs[4].store_s < 21.0
+
+
+# -- MTBF merge + durable feed -----------------------------------------------
+def test_mtbf_merge_and_feed_round_trip(tmp_path):
+    from repro.chaos.cadence import MTBFFeed
+    est = MTBFEstimator(prior_mtbf_s=3600.0)
+    est.note_progress(0.0)
+    est.note_failure(10.0)
+    feed = MTBFFeed(str(tmp_path / "feed.json"))
+    assert feed.read() is None                 # missing file: no warning
+    feed.write(est, deaths=1, mttr_s=[2.5])
+    fresh = MTBFEstimator(prior_mtbf_s=3600.0)
+    assert feed.seed(fresh) is True
+    assert fresh.failures == 1 and fresh.span_s == pytest.approx(10.0)
+    assert fresh.estimate() == pytest.approx(est.estimate())
+    assert fresh.estimate() < 3600.0           # the estimate actually moved
+    blob = feed.read()
+    assert blob["deaths"] == 1 and blob["mttr_s"] == [2.5]
+
+
+def test_mtbf_feed_malformed_warns_and_seeds_nothing(tmp_path):
+    from repro.chaos.cadence import MTBFFeed
+    p = tmp_path / "feed.json"
+    for bad in ("not json", "[1]", '{"failures": "wat", "span_s": "x"}'):
+        p.write_text(bad)
+        est = MTBFEstimator()
+        with pytest.warns(RuntimeWarning):
+            assert MTBFFeed(str(p)).seed(est) is False
+        assert est.failures == 0
+
+
+# -- backoff reset after sustained health ------------------------------------
+def test_backoff_resets_after_sustained_healthy_span():
+    b = ExponentialBackoff(base_s=1.0, max_s=30.0)
+    b.failed()
+    b.failed()
+    assert b.note_healthy_span(5.0, 10.0) is False
+    assert b.failures == 2                     # not healthy long enough
+    assert b.note_healthy_span(10.0, 10.0) is True
+    assert b.failures == 0
+    assert b.note_healthy_span(20.0, 10.0) is False   # nothing to forget
+    assert b.failed() == 1.0                   # back to base, not 4.0
