@@ -89,6 +89,68 @@ def compressed_store(repeats: int = 3) -> Dict[str, float]:
     }
 
 
+def telemetry_overhead(repeats: int = 3) -> Dict[str, float]:
+    """Telemetry-plane overhead datapoint: wall time of a traced L4 store
+    (span recorder + metrics registry live, so every instrumented stage —
+    Plan/Pack/Place/Commit spans, chunk-upload spans, metric increments —
+    records for real) vs the same store with telemetry disabled (the
+    no-op fast path).  Synchronous fti, interleaved repeats; the ratio is
+    the min over per-round (on/off) pairs — adjacent runs share whatever
+    the box was doing, so pairing cancels drift that a min-of-mins ratio
+    eats whole, while a systematic cost still shows in every round.
+    ``telemetry_overhead_ratio`` is hard-gated at 1.05 in
+    check_overhead_regression.py — the plane's contract is that
+    observability never costs real store time."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core.context import CheckpointConfig, CheckpointContext
+    from repro.telemetry import trace as ttrace
+
+    n = 1 << 22                      # 16 MiB of f32 payload
+    rng = np.random.default_rng(0)
+    state = {"params": {"w": jnp.asarray(rng.normal(size=n)
+                                         .astype(np.float32))}}
+
+    def one_store(tag: str) -> float:
+        d = f"/tmp/bo-telemetry-{tag}"
+        shutil.rmtree(d, ignore_errors=True)
+        ctx = CheckpointContext(CheckpointConfig(
+            dir=d, backend="fti", dedicated_thread=False))
+        t0 = time.time()
+        ctx.store(state, id=1, level=4)
+        dt = time.time() - t0
+        ctx.shutdown()
+        shutil.rmtree(d, ignore_errors=True)
+        return dt
+
+    def arm(tag: str) -> None:
+        if tag == "on":
+            ttrace.tracer().reset()  # keep the event list from compounding
+            ttrace.enable()
+        else:
+            ttrace.disable()
+
+    variants = ("off", "on")
+    times: Dict[str, list] = {t: [] for t in variants}
+    try:
+        for tag in variants:                      # warmup: jit + page cache
+            arm(tag)
+            one_store(tag)
+        for _ in range(max(repeats, 5)):          # interleave: shared drift
+            for tag in variants:                  # hits both variants alike
+                arm(tag)
+                times[tag].append(one_store(tag))
+    finally:
+        ttrace.disable()
+        ttrace.tracer().reset()
+    ratios = [on / off for off, on in zip(times["off"], times["on"])]
+    return {
+        "telemetry_off_store_s": min(times["off"]),
+        "telemetry_on_store_s": min(times["on"]),
+        "telemetry_overhead_ratio": min(ratios),
+    }
+
+
 def objstore_store(repeats: int = 3) -> Dict[str, float]:
     """Object-store L4 datapoint: wall time of a chunked+cataloged store
     (``objstore_store_s``), the store-path goodput
@@ -369,6 +431,7 @@ def run(repeats: int = 3) -> Dict[str, float]:
         out[f"openchk_{backend}_s"] = min(t_openchk)
         out[f"overhead_ratio_{backend}"] = min(t_openchk) / min(t_native)
     out.update(compressed_store(repeats=repeats))
+    out.update(telemetry_overhead(repeats=repeats))
     out.update(sharded_store(repeats=repeats))
     out.update(objstore_store(repeats=repeats))
     out.update(objstore_shift_dedup())

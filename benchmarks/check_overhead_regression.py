@@ -37,6 +37,11 @@ And the objstore datapoints:
   ratio threshold — goodput is an absolute-seconds datapoint and eats
   the box's full wall-clock noise).
 
+- ``telemetry_overhead_ratio`` — traced/untraced wall time of the same
+  L4 store (span recorder + metrics registry live vs the disabled no-op
+  fast path); hard-gated at 1.05 — observability must never cost real
+  store time.
+
 And the chaos recovery datapoints (node-loss-mid-store, best-of-N):
 
 - ``chaos_mttr_s`` — wall time from node death to a verified bit-exact
@@ -109,6 +114,12 @@ CADENCE_INTERVAL_BAND = (0.90, 1.10)
 # legitimately move when the cadence model changes — floor it against the
 # committed baseline with a small absolute slack instead of a hard value
 CADENCE_EFFICIENCY_SLACK = 0.05
+# the telemetry plane (span recorder + metrics registry) must be free at
+# store granularity: traced/untraced wall-time ratio of the same 16 MiB
+# L4 store (interleaved repeats, ratio of mins).  Hard ceiling — above
+# 5% the plane is costing real store time and the "observability is
+# always on-able" contract is broken
+TELEMETRY_OVERHEAD_CEILING = 1.05
 # goodput is payload bytes over objstore store wall time — a single
 # absolute-seconds measurement, so it inherits the full +/-50% wall-clock
 # noise of this box (the ratio gates cancel that noise; goodput can't).
@@ -214,6 +225,14 @@ def main(argv=None) -> int:
             failures.append(f"{key}: {swp:.3f} > "
                             f"{SERVE_SWAP_DELTA_CEILING} (hot-swap deploy "
                             f"no longer chunk-delta — pulling full weights)")
+
+    # telemetry datapoint: tracing+metrics must stay free on the store
+    # path (hard ceiling — the interleaved min-of-N ratio sheds noise)
+    tel = res.get("telemetry_overhead_ratio")
+    if tel is not None and tel > TELEMETRY_OVERHEAD_CEILING:
+        failures.append(f"telemetry_overhead_ratio: {tel:.3f} > "
+                        f"{TELEMETRY_OVERHEAD_CEILING} (tracing/metrics "
+                        f"plane costing real store time)")
 
     # goodput datapoint: the fused Pack → upload path must exist and must
     # not fall more than the noise threshold below the baseline

@@ -1,0 +1,74 @@
+"""Telemetry walkthrough: trace a store end to end, read the metrics,
+probe a live health endpoint, and summarize the trace with chktrace.
+
+The telemetry plane is three stdlib-only pieces (``repro.telemetry``):
+
+- ``trace``   — process-wide span recorder exporting Chrome trace-event
+  JSON (load the file at https://ui.perfetto.dev to see Plan → Pack →
+  Place → Commit nested per thread, chunk uploads on the transfer pool);
+- ``metrics`` — always-on counter/gauge/histogram registry with JSON
+  snapshot and Prometheus text exposition;
+- ``health``  — a real HTTP endpoint (/healthz /readyz /metrics) whose
+  readiness follows the serving swap protocol.
+
+Run:  PYTHONPATH=src python examples/telemetry_trace.py
+"""
+import json
+import urllib.request
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.context import CheckpointConfig, CheckpointContext
+from repro.telemetry import metrics, trace
+from repro.telemetry.health import HealthServer, HealthState
+from repro.tools.chktrace import store_critical_paths, build_spans
+
+TRACE_PATH = "/tmp/openchk-telemetry/trace.json"
+
+# --- 1. trace a real store ----------------------------------------------- #
+# enable() here; production turns it on from outside via OPENCHK_TRACE=
+# <file> or OPENCHK_TRACE_DIR=<dir> (launch/train.py --trace-dir does the
+# latter so supervisor + restarted workers merge onto one timeline)
+trace.enable(TRACE_PATH)
+
+ctx = CheckpointContext(CheckpointConfig(
+    dir="/tmp/openchk-telemetry/ckpt", backend="fti",
+    dedicated_thread=False))
+state = {"params": {"w": jnp.asarray(
+    np.arange(1 << 20, dtype=np.float32))}}
+report = ctx.store(state, id=1, level=4)         # L4 → chunk uploads too
+ctx.shutdown()
+trace.flush()
+print(f"trace written: {TRACE_PATH}  (open in ui.perfetto.dev)")
+print(f"the report knows its span: StoreReport.span_id={report.span_id}")
+
+# --- 2. ask questions about the trace (what chktrace automates) ---------- #
+events = json.load(open(TRACE_PATH))["traceEvents"]
+for row in store_critical_paths(build_spans(events)):
+    print(f"store ckpt={row['ckpt_id']}: {row['dur_us'] / 1e3:.1f} ms, "
+          f"dominant stage = {row['dominant_stage']}")
+print("same, from the CLI:  PYTHONPATH=src python -m repro.tools.chktrace "
+      + TRACE_PATH)
+
+# --- 3. the metrics the store fed ---------------------------------------- #
+snap = metrics.snapshot()
+stores = snap["openchk_store_total"]["series"][0]
+print(f"openchk_store_total{stores['labels']} = {stores['value']}")
+print("prometheus text has",
+      len(metrics.to_prometheus().splitlines()), "lines")
+
+# --- 4. a live health endpoint ------------------------------------------- #
+# serving replicas get this wired automatically (attach_engine / the
+# --health-port flags on launch/serve.py and launch/train.py --supervise)
+health = HealthState(name="demo")
+srv = HealthServer(health).start()
+for ready in (False, True):
+    health.set_ready(ready, epoch=1)
+    try:
+        with urllib.request.urlopen(srv.url + "/readyz", timeout=5) as r:
+            code, body = r.status, r.read().decode()
+    except urllib.error.HTTPError as e:
+        code, body = e.code, e.read().decode()
+    print(f"/readyz while ready={ready}: HTTP {code} {body.strip()}")
+srv.stop()

@@ -38,7 +38,9 @@ replacing the old blanket ``env.pop(OPENCHK_CHAOS)``. Malformed state
 warns and is ignored, like the env protocol.
 
 Stdlib-only on purpose: every instrumented module (objstore client, chunk
-streams, pipeline, detector) can import this leaf without cycles.
+streams, pipeline, detector) can import this leaf without cycles.  The one
+repro import is :mod:`repro.telemetry` — itself a stdlib-only leaf — so
+every fired fault is also a trace instant and a fault counter.
 """
 from __future__ import annotations
 
@@ -52,6 +54,13 @@ import time
 import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
+
+# telemetry is the one permitted repro import: like this module it is a
+# stdlib-only leaf, so the no-cycle rule holds.  Every fired fault lands
+# on the trace timeline (the fault → kill → restart → resume narrative
+# chktrace reconstructs) and on the fault counters.
+from repro.telemetry import metrics as tmetrics
+from repro.telemetry import trace as ttrace
 
 CHAOS_ENV = "OPENCHK_CHAOS"
 CHAOS_STATE_ENV = "OPENCHK_CHAOS_STATE"
@@ -381,6 +390,15 @@ class ChaosRegistry:
                 self.history.append(
                     FiredFault(site=site, mode=spec.mode, t=time.monotonic(), ctx=dict(ctx))
                 )
+                # ctx keys are renamed where they would shadow the
+                # instant()'s own parameters (e.g. chunkstream's "name")
+                ttrace.instant("chaos.fault", site=site, mode=spec.mode,
+                               **{(k if k not in ("name", "cat", "scope",
+                                                  "site", "mode")
+                                   else f"ctx_{k}"): v
+                                  for k, v in ctx.items()})
+                tmetrics.counter("openchk_faults_fired_total",
+                                 site=site, mode=spec.mode).inc()
                 if spec.mode == "delay":
                     # sleep outside the lock would be nicer, but delays are
                     # short and scenario-scoped; keep firing atomic.
@@ -392,8 +410,11 @@ class ChaosRegistry:
                 elif spec.mode == "exit":
                     # the kill must be on disk before the process dies —
                     # a restarted child that reloads stale counters would
-                    # be re-killed at the same hit count
+                    # be re-killed at the same hit count.  Same for the
+                    # trace: os._exit skips atexit, so flush now — the
+                    # fault instant above must survive its own kill
                     self._persist_state_locked()
+                    ttrace.flush()
                     os._exit(EXIT_CODE)
                 else:  # error
                     msg = spec.message or f"[chaos] injected fault at {site}"

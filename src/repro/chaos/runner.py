@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import tempfile
 
@@ -40,17 +41,25 @@ def main(argv=None) -> int:
                     help="also run the supervised multi-process "
                          "kill/restart scenario (slow)")
     ap.add_argument("--out", default=None, help="write JSON report here")
+    ap.add_argument("--trace-dir", default=None,
+                    help="record a perfetto trace per scenario cell into "
+                         "this dir (<name>-<backend>.json); the report's "
+                         "detail gains trace_file + a metrics snapshot")
     args = ap.parse_args(argv)
 
     backends = tuple(args.backend) if args.backend else BACKENDS
     names = args.scenario or None
+    if args.trace_dir:
+        os.makedirs(args.trace_dir, exist_ok=True)
     if args.workdir:
         report = run_matrix(args.workdir, backends, names,
-                            include_supervised=args.include_supervised)
+                            include_supervised=args.include_supervised,
+                            trace_dir=args.trace_dir)
     else:
         with tempfile.TemporaryDirectory(prefix="openchk-chaos-") as d:
             report = run_matrix(d, backends, names,
-                                include_supervised=args.include_supervised)
+                                include_supervised=args.include_supervised,
+                                trace_dir=args.trace_dir)
 
     text = json.dumps(report, indent=2, sort_keys=True)
     if args.out:

@@ -79,6 +79,8 @@ from repro.ft.straggler import commit_if_quorum, validate_quorum
 from repro.objstore.client import ObjectStoreError
 from repro.objstore.gc import GC_MARK_KEY
 from repro.redundancy.groups import Topology
+from repro.telemetry import metrics as tmetrics
+from repro.telemetry import trace as ttrace
 
 BACKENDS = ("fti", "scr", "veloc")
 WORLD = 4
@@ -641,27 +643,63 @@ def supervised_kill(workdir: str, backend: str) -> ScenarioResult:
                 "state_fired": fired_total, "feed": feed})
 
 
-def run_scenario(name: str, backend: str, workdir: str) -> ScenarioResult:
-    """Run one scenario with a clean chaos registry, always disarming."""
+def run_scenario(name: str, backend: str, workdir: str,
+                 trace_dir: Optional[str] = None) -> ScenarioResult:
+    """Run one scenario with a clean chaos registry, always disarming.
+
+    With *trace_dir*, the cell runs traced: this process records into
+    ``<trace_dir>/<name>-<backend>/trace-<pid>.json``, spawned supervised
+    workers inherit ``OPENCHK_TRACE_DIR`` and contribute their own files,
+    and afterwards everything folds into ``<trace_dir>/<name>-<backend>.json``
+    — ``detail.trace_file`` points there and ``detail.metrics`` embeds the
+    cell's metrics-registry snapshot."""
     chaos.reset()
     os.makedirs(workdir, exist_ok=True)
+    cell = f"{name}-{backend}"
+    raw_dir = None
+    prev_env: Dict[str, Optional[str]] = {}
+    if trace_dir is not None:
+        raw_dir = os.path.join(trace_dir, cell)
+        os.makedirs(raw_dir, exist_ok=True)
+        prev_env = {k: os.environ.get(k)
+                    for k in (ttrace.TRACE_ENV, ttrace.TRACE_DIR_ENV)}
+        os.environ.pop(ttrace.TRACE_ENV, None)
+        os.environ[ttrace.TRACE_DIR_ENV] = raw_dir  # children inherit
+        tmetrics.reset()
+        ttrace.tracer().reset()
+        ttrace.enable(os.path.join(raw_dir, f"trace-{os.getpid()}.json"))
     try:
         fn = SCENARIOS.get(name) or SUPERVISED[name]
-        return fn(workdir, backend)
+        result = fn(workdir, backend)
     except Exception as e:  # a crashed scenario is a failed scenario
-        return ScenarioResult(
+        result = ScenarioResult(
             name, backend, False,
             faults_fired=chaos.registry().fired_count(),
             recovery_path="error", recovery_s=0.0, data_loss_bytes=-1,
             detail={"error": f"{type(e).__name__}: {e}"})
     finally:
         chaos.reset()
+        if raw_dir is not None:
+            ttrace.flush()
+            ttrace.disable()
+            ttrace.tracer().reset()
+            for k, v in prev_env.items():
+                if v is None:
+                    os.environ.pop(k, None)
+                else:
+                    os.environ[k] = v
+    if raw_dir is not None:
+        result.detail["trace_file"] = ttrace.merge_dir(
+            raw_dir, os.path.join(trace_dir, f"{cell}.json"))
+        result.detail["metrics"] = tmetrics.snapshot()
+    return result
 
 
 def run_matrix(workdir: str,
                backends=BACKENDS,
                names: Optional[List[str]] = None,
-               include_supervised: bool = False) -> Dict[str, Any]:
+               include_supervised: bool = False,
+               trace_dir: Optional[str] = None) -> Dict[str, Any]:
     """The full scenario × backend matrix → machine-readable report.
 
     Supervised scenarios spawn real worker processes, so they run once
@@ -674,11 +712,11 @@ def run_matrix(workdir: str,
     for n in names:
         if n in SUPERVISED:
             d = os.path.join(workdir, f"{n}-{backends[0]}")
-            results.append(run_scenario(n, backends[0], d))
+            results.append(run_scenario(n, backends[0], d, trace_dir))
             continue
         for be in backends:
             d = os.path.join(workdir, f"{n}-{be}")
-            results.append(run_scenario(n, be, d))
+            results.append(run_scenario(n, be, d, trace_dir))
     return {
         "scenarios": [r.to_dict() for r in results],
         "total": len(results),

@@ -74,6 +74,8 @@ from repro.core.tiers import (
     recovery_ladder,
 )
 from repro.redundancy.groups import Topology
+from repro.telemetry import metrics as tmetrics
+from repro.telemetry import trace as ttrace
 
 
 @dataclass
@@ -115,6 +117,10 @@ class StoreReport:
     seconds: float
     dirty_ratio: Optional[float] = None
     promoted_full: bool = False
+    #: id of the ``pipeline.store`` span that produced this report (None
+    #: when tracing is disabled) — lets chktrace join goodput accounting
+    #: back onto the timeline
+    span_id: Optional[int] = None
 
 
 @dataclass
@@ -266,6 +272,13 @@ class CheckpointPipeline:
     # ------------------------------------------------------------------ #
 
     def plan(self, req: StoreRequest) -> Plan:
+        """Span-wrapped Plan (the only stage on the calling thread — its
+        span lands on the training thread's track, not the CP thread's)."""
+        with ttrace.span("pipeline.plan", ckpt_id=req.ckpt_id,
+                         level=req.level, kind=req.kind):
+            return self._plan_impl(req)
+
+    def _plan_impl(self, req: StoreRequest) -> Plan:
         """Resolve kind/level, run the on-device diff kernels, snapshot to
         host.  The only pipeline stage that runs on the calling thread.
 
@@ -400,6 +413,12 @@ class CheckpointPipeline:
     # ------------------------------------------------------------------ #
 
     def pack(self, plan: Plan) -> Packed:
+        """Span-wrapped Pack (runs on the CP thread for async stores)."""
+        with ttrace.span("pipeline.pack", ckpt_id=plan.ckpt_id,
+                         level=plan.level, kind=plan.kind):
+            return self._pack_impl(plan)
+
+    def _pack_impl(self, plan: Plan) -> Packed:
         """Serialize the planned payload into the staging dir: the Pack-tier
         chain encodes FULL leaves per their clauses (compression, format
         attrs, precision); DIFF deltas ship as compacted dirty blocks.  A
@@ -481,14 +500,24 @@ class CheckpointPipeline:
             chaos.fire(chaos.SITES.TIER_PLACE, tier=tier.name,
                        level=plan.level, ckpt_id=plan.ckpt_id,
                        rank=self.comm.rank)
-            tier.place(plan.ckpt_id, packed.stage_dir, packed.path,
-                       extra_files=packed.shard_files)
+            with ttrace.span("pipeline.place", tier=tier.name,
+                             level=plan.level, ckpt_id=plan.ckpt_id):
+                tier.place(plan.ckpt_id, packed.stage_dir, packed.path,
+                           extra_files=packed.shard_files)
 
     # ------------------------------------------------------------------ #
     # stage 4: Commit
     # ------------------------------------------------------------------ #
 
     def commit(self, plan: Plan, packed: Packed) -> StoreReport:
+        """Span-wrapped Commit; also the single metrics feed point (every
+        store path — sync, CP-thread, external — converges here)."""
+        with ttrace.span("pipeline.commit", ckpt_id=plan.ckpt_id,
+                         level=plan.level, kind=plan.kind,
+                         bytes=packed.nbytes):
+            return self._commit_impl(plan, packed)
+
+    def _commit_impl(self, plan: Plan, packed: Packed) -> StoreReport:
         """Status allgather + manifest + atomic rename + retention.
 
         (Rank0-equivalent; every rank writes the same manifest data in the
@@ -521,12 +550,18 @@ class CheckpointPipeline:
             chaos.fire(chaos.SITES.TIER_COMMIT, tier=tier.name,
                        level=plan.level, ckpt_id=plan.ckpt_id,
                        rank=self.comm.rank)
-            tier.commit(plan.ckpt_id, committed)
+            with ttrace.span("pipeline.commit.tier", tier=tier.name,
+                             level=plan.level, ckpt_id=plan.ckpt_id):
+                tier.commit(plan.ckpt_id, committed)
         # seconds = store work only (plan + tail), not CP-queue waiting
         report = StoreReport(plan.ckpt_id, plan.level, plan.kind,
                              packed.nbytes,
                              plan.plan_seconds + (time.time() - plan.t0),
                              plan.dirty_ratio, plan.promoted_full)
+        # canonical store metrics fed here, at the single convergence
+        # point; the single-slot on_report hook stays free for user
+        # observers (the cadence controller's store-cost feed)
+        tmetrics.note_store_report(report)
         if self.on_report is not None:
             self.on_report(report)
         return report
@@ -573,6 +608,13 @@ class CheckpointPipeline:
         async DIFF stores see each other); if the tail fails, the chain now
         describes a checkpoint that never committed — invalidate those
         leaves so a later DIFF can't delta against phantom data."""
+        with ttrace.span("pipeline.store", ckpt_id=plan.ckpt_id,
+                         level=plan.level, kind=plan.kind) as sp:
+            report = self._finish_impl(plan)
+            report.span_id = sp.id
+            return report
+
+    def _finish_impl(self, plan: Plan) -> StoreReport:
         plan.t0 = time.time()       # exclude any CP-queue wait from seconds
         try:
             if plan.pending_digests is not None:
@@ -614,12 +656,17 @@ class CheckpointPipeline:
             stage_dir=mf.ckpt_dir(plan.root, plan.ckpt_id, tmp=True),
             path=payload_path, nbytes=nbytes,
             shard_files=list(extra_files or []))
-        try:
-            self.place(plan, packed)
-            return self.commit(plan, packed)
-        except BaseException:
-            self.diff.invalidate(self._plan_leaf_paths(plan))
-            raise
+        with ttrace.span("pipeline.store", ckpt_id=plan.ckpt_id,
+                         level=plan.level, kind=plan.kind,
+                         external=True) as sp:
+            try:
+                self.place(plan, packed)
+                report = self.commit(plan, packed)
+            except BaseException:
+                self.diff.invalidate(self._plan_leaf_paths(plan))
+                raise
+            report.span_id = sp.id
+            return report
 
     def store(self, req: StoreRequest) -> StoreReport:
         """Run all four stages synchronously."""

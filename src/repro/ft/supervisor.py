@@ -42,6 +42,9 @@ from repro.chaos import inject
 from repro.chaos.cadence import MTBFEstimator, MTBFFeed
 from repro.ft.backoff import ExponentialBackoff
 from repro.ft.detector import Heartbeat
+from repro.telemetry import metrics as tmetrics
+from repro.telemetry import trace as ttrace
+from repro.telemetry.health import HealthServer, HealthState
 
 
 @dataclass
@@ -56,6 +59,10 @@ class SupervisorConfig:
     poll_s: float = 1.0
     mtbf_feed_path: Optional[str] = None
     prior_mtbf_s: float = 3600.0
+    #: serve /healthz, /readyz, /metrics for this supervisor (0 →
+    #: ephemeral port, None → no endpoint).  Readiness = the *current*
+    #: worker has beaten (flips False across a death/restart window).
+    health_port: Optional[int] = None
 
     def startup_grace(self) -> float:
         return (self.startup_grace_s if self.startup_grace_s is not None
@@ -107,17 +114,37 @@ class Supervisor:
         self.deaths = 0
         self.gap_kills = 0
         self.mttr_s: List[float] = []
+        self.health = HealthState(name="supervisor")
+        self.health_server: Optional[HealthServer] = None
+        if cfg.health_port is not None:
+            self.health_server = HealthServer(
+                self.health, port=cfg.health_port).start()
+            self.log(f"[supervisor] health endpoint on "
+                     f"{self.health_server.url}")
 
     # -- the restart loop --------------------------------------------------
     def run(self) -> int:
+        try:
+            return self._run()
+        finally:
+            if self.health_server is not None:
+                self.health_server.stop()
+                self.health_server = None
+            self._merge_trace()
+
+    def _run(self) -> int:
         death_t: Optional[float] = None
         while self.attempts < self.cfg.max_restarts + 1:
             self.attempts += 1
             self.log(f"[supervisor] attempt {self.attempts}")
+            if self.attempts > 1:
+                ttrace.instant("supervisor.restart", attempt=self.attempts)
+                tmetrics.counter("openchk_worker_restarts_total").inc()
             spawn_wall = self.wall()
             spawn_t = self.clock()
-            p = self.popen(self.cmd, env=self.env)
-            rc, why = self._watch(p, spawn_wall, spawn_t, death_t)
+            with ttrace.span("supervisor.attempt", attempt=self.attempts):
+                p = self.popen(self.cmd, env=self.env)
+                rc, why = self._watch(p, spawn_wall, spawn_t, death_t)
             if rc == 0:
                 self.log(f"[supervisor] success after {self.attempts} "
                          f"attempt(s); deaths={self.deaths} "
@@ -127,6 +154,12 @@ class Supervisor:
             death_t = self.clock()
             self.deaths += 1
             self.estimator.note_failure(death_t)
+            self.health.set_ready(False, reason=f"worker died ({why})",
+                                  attempt=self.attempts)
+            ttrace.instant("worker.death", rc=rc, why=why,
+                           last_step=self.hb.last_step(),
+                           attempt=self.attempts)
+            tmetrics.counter("openchk_worker_deaths_total").inc()
             self.log(f"[supervisor] worker died rc={rc} via {why} "
                      f"(last step {self.hb.last_step()}); restarting "
                      f"from checkpoint")
@@ -143,6 +176,17 @@ class Supervisor:
         self.log("[supervisor] giving up")
         self._write_feed()
         return 1
+
+    def _merge_trace(self) -> None:
+        """Dir-mode runs end with one perfetto-loadable ``trace.json``:
+        flush this process's events, then fold in every per-process file
+        the (possibly killed and restarted) workers left behind."""
+        d = ttrace.tracer().trace_dir()
+        if d is not None:
+            ttrace.flush()
+            merged = ttrace.merge_dir(d)
+            if merged:
+                self.log(f"[supervisor] merged trace → {merged}")
 
     def _watch(self, p, spawn_wall: float, spawn_t: float,
                death_t: Optional[float]):
@@ -172,10 +216,17 @@ class Supervisor:
                              f"grace ({grace:.1f}s) → killing worker")
                     return self._kill(p), "startup-grace"
                 continue
+            if last_beat_wall is None:
+                # first beat from THIS worker: it is making progress
+                self.health.set_ready(True, step=self.hb.last_step(),
+                                      attempt=self.attempts)
             if not recovered:
                 recovered = True
                 mttr = now - death_t
                 self.mttr_s.append(mttr)
+                tmetrics.histogram("openchk_mttr_seconds").observe(mttr)
+                ttrace.instant("supervisor.recovered", mttr_s=round(mttr, 3),
+                               attempt=self.attempts)
                 self.log(f"[supervisor] recovery complete: "
                          f"mttr {mttr:.2f}s")
             if bw != last_beat_wall:
@@ -193,6 +244,8 @@ class Supervisor:
         return p.wait()
 
     def _write_feed(self) -> None:
+        tmetrics.gauge("openchk_mtbf_estimate_seconds").set(
+            self.estimator.estimate())
         if self.feed is not None:
             self.feed.write(self.estimator, deaths=self.deaths,
                             mttr_s=self.mttr_s)

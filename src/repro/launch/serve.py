@@ -30,6 +30,9 @@ def main() -> int:
     ap.add_argument("--deploy-cache", default=None,
                     help="node-local chunk/file cache for --follow-catalog "
                     "pulls (default <ckpt-dir>/deploy-cache)")
+    ap.add_argument("--health-port", type=int, default=None,
+                    help="serve /healthz /readyz /metrics for this replica "
+                    "(0 = ephemeral); readiness follows weight swaps")
     args = ap.parse_args()
 
     import jax
@@ -44,10 +47,17 @@ def main() -> int:
         cfg = cfg.reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServingEngine(model, params, args.batch, args.max_len)
+    eng = ServingEngine(model, params, args.batch, args.max_len,
+                        name="serve0")
     eng.swap_hook = lambda old, new: print(
         f"[serve] weights swapped: epoch {old.epoch} -> {new.epoch} "
         f"(catalog entry {new.entry_id})")
+
+    health = None
+    if args.health_port is not None:
+        from repro.telemetry.health import attach_engine
+        health = attach_engine(eng, name="serve0", port=args.health_port)
+        print(f"[serve] health endpoint on {health.server.url}")
 
     deployer = None
     if args.follow_catalog:
@@ -57,7 +67,7 @@ def main() -> int:
         deployer = FleetDeployer(
             make_object_store(args.follow_catalog),
             [Replica(name="serve0", engine=eng, cache_root=cache,
-                     prefix="params")])
+                     prefix="params", health=health)])
 
     ckpt = CheckpointContext(CheckpointConfig(dir=args.ckpt_dir,
                                               backend=args.backend))

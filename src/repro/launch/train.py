@@ -114,6 +114,7 @@ def supervise(args) -> int:
         backoff_max_s=args.restart_backoff_max,
         mtbf_feed_path=os.path.join(args.ckpt_dir, "mtbf-feed.json"),
         prior_mtbf_s=args.cadence_mtbf,
+        health_port=args.health_port,
     ))
     return sup.run()
 
@@ -155,8 +156,20 @@ def main() -> int:
                          "of the fixed --ckpt-every cycle")
     ap.add_argument("--cadence-mtbf", type=float, default=3600.0,
                     help="prior MTBF seconds for the cadence controller")
+    ap.add_argument("--trace-dir", default=None,
+                    help="write perfetto trace files (trace-<pid>.json) "
+                         "into this dir; under --supervise the supervisor "
+                         "merges worker files into one trace.json")
+    ap.add_argument("--health-port", type=int, default=None,
+                    help="with --supervise: serve /healthz /readyz "
+                         "/metrics on this port (0 = ephemeral)")
     args = ap.parse_args()
     os.makedirs(args.ckpt_dir, exist_ok=True)
+    if args.trace_dir:
+        # env, not a direct enable: the worker subprocesses a supervisor
+        # spawns inherit it (each process writes trace-<pid>.json)
+        os.makedirs(args.trace_dir, exist_ok=True)
+        os.environ["OPENCHK_TRACE_DIR"] = args.trace_dir
     if args.supervise:
         return supervise(args)
     return worker(args)

@@ -50,6 +50,8 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 from repro.chaos import inject as chaos
 from repro.objstore.cdc import CDCParams, Chunker
 from repro.objstore.client import ObjectStore, ObjectStoreError
+from repro.telemetry import metrics as tmetrics
+from repro.telemetry import trace as ttrace
 
 DEFAULT_CHUNK_BYTES = 1 << 20
 
@@ -222,33 +224,42 @@ class ChunkUploader:
         # whole un-deduped payload in RAM at once on a first store
         data = os.pread(fd, nbytes, offset)
         try:
-            self.store.put(chunk_key(digest), data)
+            with ttrace.span("chunk.upload", digest=digest[:12],
+                             bytes=nbytes, path="file"):
+                self.store.put(chunk_key(digest), data)
         except BaseException:
             self._forget_chunk(digest)
             raise
-        with self._lock:
-            self.stats["chunks_uploaded"] += 1
-            self.stats["bytes_uploaded"] += nbytes
+        self._note_upload(nbytes)
 
     def _put_stream_chunk(self, digest: str, data: bytes) -> None:
         # streamed chunks upload from memory; the semaphore acquired at
         # submit time bounds how many can sit in the queue at once
         try:
             try:
-                self.store.put(chunk_key(digest), data)
+                with ttrace.span("chunk.upload", digest=digest[:12],
+                                 bytes=len(data), path="stream"):
+                    self.store.put(chunk_key(digest), data)
             except BaseException:
                 self._forget_chunk(digest)
                 raise
-            with self._lock:
-                self.stats["chunks_uploaded"] += 1
-                self.stats["bytes_uploaded"] += len(data)
+            self._note_upload(len(data))
         finally:
             self._inflight.release()
+
+    def _note_upload(self, nbytes: int) -> None:
+        with self._lock:
+            self.stats["chunks_uploaded"] += 1
+            self.stats["bytes_uploaded"] += nbytes
+        tmetrics.counter("openchk_chunks_uploaded_total").inc()
+        tmetrics.counter("openchk_chunk_bytes_uploaded_total").inc(nbytes)
 
     def _note_dedup(self, nbytes: int) -> None:
         with self._lock:
             self.stats["chunks_deduped"] += 1
             self.stats["bytes_deduped"] += nbytes
+        tmetrics.counter("openchk_chunks_deduped_total").inc()
+        tmetrics.counter("openchk_chunk_bytes_deduped_total").inc(nbytes)
 
     def _chunk_known(self, digest: str, nbytes: int) -> bool:
         """Atomic check-and-mark: True ⇒ the chunk is already stored or
@@ -499,6 +510,8 @@ class ChunkStream:
                           data=data, name=self.name,
                           seq=len(self._chunks)).data
         digest = hashlib.sha256(data).hexdigest()
+        ttrace.instant("chunk.emit", stream=self.name,
+                       seq=len(self._chunks), bytes=len(data))
         self._chunks.append((digest, self._offset, len(data)))
         self._offset += len(data)
         if up._chunk_known(digest, len(data)):

@@ -67,6 +67,9 @@ from repro.objstore.client import ObjectStore, ObjectStoreError
 from repro.objstore.inspect import EntryInfo
 from repro.objstore.subscriber import CatalogSubscriber, DeploySelector
 from repro.serve.engine import ServingEngine, WeightsHandle
+from repro.telemetry import metrics as tmetrics
+from repro.telemetry import trace as ttrace
+from repro.telemetry.health import HealthState
 
 
 class EntryPuller:
@@ -135,6 +138,11 @@ class Replica:
     failures: int = 0
     next_retry_t: float = 0.0
     last_error: Optional[str] = None
+    #: optional live readiness for this replica (telemetry/health.py):
+    #: the deployer drops it for the pull window and re-asserts it after
+    #: the flip (or after a failed pull — the old epoch is still serving),
+    #: so a rolling swap is observable from /readyz outside the process
+    health: Optional[HealthState] = None
     _puller: Optional[EntryPuller] = field(default=None, repr=False)
 
     def puller(self, store: ObjectStore) -> EntryPuller:
@@ -170,6 +178,17 @@ class FleetDeployer:
         self._watch_retry_t = 0.0      # backoff for catalog-poll outages
         self.stats = {"swaps": 0, "rollouts": 0, "pulls_failed": 0,
                       "bytes_fetched": 0, "bytes_cached": 0}
+        # the fleet's epoch/entry view lives on the telemetry gauges from
+        # here on (fleet_epochs() is a shim over them): stamp each
+        # engine's telemetry label with its fleet name and seed the
+        # gauges from the weights it currently serves
+        for r in self.replicas:
+            r.engine.name = r.name
+            h = r.engine.weights
+            tmetrics.gauge("openchk_serve_epoch",
+                           replica=r.name).set(h.epoch)
+            tmetrics.gauge("openchk_fleet_entry_id", replica=r.name).set(
+                -1 if h.entry_id is None else h.entry_id)
 
     # -- one control-loop step ------------------------------------------ #
 
@@ -220,11 +239,16 @@ class FleetDeployer:
             r.next_retry_t = now + backoff_delay(
                 r.failures, self.backoff_s, self.max_backoff_s)
             self.stats["pulls_failed"] += 1
+            tmetrics.counter("openchk_deploy_pulls_failed_total",
+                             replica=r.name).inc()
+            ttrace.instant("deploy.pinned", replica=r.name,
+                           entry=self.target.id, error=r.last_error)
             return {"action": "pinned", "replica": r.name,
                     "epoch": r.engine.weights.epoch,
                     "error": r.last_error, "retry_at": r.next_retry_t}
         self._next += 1
         self.stats["swaps"] += 1
+        tmetrics.counter("openchk_deploy_swaps_total", replica=r.name).inc()
         r.failures = 0
         r.last_error = None
         return dict(swap, action="swapped", replica=r.name,
@@ -250,14 +274,35 @@ class FleetDeployer:
     def _swap_one(self, r: Replica, entry: EntryInfo) -> Dict[str, Any]:
         """Pull + assemble + atomic flip for one replica.  Everything up
         to ``set_weights`` is side-effect-free for the serving path —
-        any exception leaves the old handle serving."""
+        any exception leaves the old handle serving.
+
+        Readiness (when the replica carries a HealthState) drops for the
+        pull/assemble window and is re-asserted on both exits: after the
+        flip via the engine's swap hook, and after a failure because the
+        old epoch never stopped serving."""
         # chaos site: an error-mode spec here exercises invariant 3 end to
         # end — poll() must pin the replica, never tear the fleet
         chaos.fire(chaos.SITES.DEPLOY_POLL, exc=ObjectStoreError,
                    replica=r.name, entry=entry.id)
-        pulled = r.puller(self.store).pull(entry)
+        if r.health is not None:
+            r.health.set_ready(False, reason="pulling",
+                               target_entry=entry.id)
+        try:
+            with ttrace.span("deploy.swap", replica=r.name, entry=entry.id):
+                return self._pull_and_flip(r, entry)
+        except BaseException:
+            if r.health is not None:
+                r.health.set_ready(True, reason="pull failed; "
+                                   "serving previous epoch")
+            raise
+
+    def _pull_and_flip(self, r: Replica, entry: EntryInfo) -> Dict[str, Any]:
+        with ttrace.span("deploy.pull", replica=r.name, entry=entry.id):
+            pulled = r.puller(self.store).pull(entry)
         self.stats["bytes_fetched"] += pulled["bytes_fetched"]
         self.stats["bytes_cached"] += pulled["bytes_cached"]
+        tmetrics.counter("openchk_deploy_bytes_fetched_total").inc(
+            pulled["bytes_fetched"])
 
         cur_named, treedef = flatten_named(r.engine.params)
         prefix = (r.prefix + "/") if r.prefix else ""
@@ -278,6 +323,11 @@ class FleetDeployer:
         new_params = unflatten_named(treedef, new_named, r.engine.params)
         handle = r.engine.set_weights(WeightsHandle(
             params=new_params, entry_id=entry.id))
+        if r.health is not None:
+            # idempotent with attach_engine's swap hook — covers health
+            # states not chained onto the engine
+            r.health.set_ready(True, epoch=int(handle.epoch),
+                               entry_id=handle.entry_id, reason="swapped")
         return {"entry": entry.id, "epoch": handle.epoch,
                 "bytes_fetched": pulled["bytes_fetched"],
                 "bytes_cached": pulled["bytes_cached"],
@@ -288,5 +338,12 @@ class FleetDeployer:
     def fleet_epochs(self) -> Dict[str, Optional[int]]:
         """replica name → catalog entry id currently served (the torn-
         fleet check: mid-rollout at most two distinct values, old and
-        new)."""
-        return {r.name: r.engine.weights.entry_id for r in self.replicas}
+        new).  Thin shim over the ``openchk_fleet_entry_id`` telemetry
+        gauges every swap maintains (-1 encodes "local params, no
+        catalog entry")."""
+        out: Dict[str, Optional[int]] = {}
+        for r in self.replicas:
+            v = tmetrics.gauge("openchk_fleet_entry_id",
+                               replica=r.name).value
+            out[r.name] = None if v < 0 else int(v)
+        return out

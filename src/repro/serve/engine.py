@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.zoo import Model
+from repro.telemetry import metrics as tmetrics
+from repro.telemetry import trace as ttrace
 
 
 class ServeState(NamedTuple):
@@ -64,8 +66,12 @@ def make_serve_step(model: Model) -> Callable[..., Tuple[jnp.ndarray, Any]]:
 class ServingEngine:
     """Minimal batched serving loop over a fixed request batch."""
 
-    def __init__(self, model: Model, params: Any, batch: int, max_len: int):
+    def __init__(self, model: Model, params: Any, batch: int, max_len: int,
+                 name: str = "serve"):
         self.model = model
+        #: telemetry label for this engine's swap events and gauges; a
+        #: FleetDeployer re-stamps it with the replica name it manages
+        self.name = name
         if not isinstance(params, WeightsHandle):
             params = WeightsHandle(params=params)
         self._weights = params
@@ -109,6 +115,15 @@ class ServingEngine:
                     params=handle.params, epoch=old.epoch + 1,
                     entry_id=handle.entry_id, sharding=handle.sharding)
             self._weights = handle       # the atomic flip
+        # every swap is a telemetry event + gauge update: the fleet-wide
+        # epoch/entry view (fleet_epochs, /readyz payloads, dashboards)
+        # reads these instead of bespoke dicts
+        ttrace.instant("serve.swap", replica=self.name, epoch=handle.epoch,
+                       entry=handle.entry_id)
+        tmetrics.gauge("openchk_serve_epoch",
+                       replica=self.name).set(handle.epoch)
+        tmetrics.gauge("openchk_fleet_entry_id", replica=self.name).set(
+            -1 if handle.entry_id is None else handle.entry_id)
         if self.swap_hook is not None:
             self.swap_hook(old, handle)
         return handle

@@ -1,0 +1,23 @@
+"""Unified telemetry plane: span tracing, metrics registry, live health.
+
+Three stdlib-only leaves every layer of the stack can import without
+cycles (the same layering rule as ``repro.chaos.inject``):
+
+- :mod:`repro.telemetry.trace` — thread-safe span/instant recorder with a
+  no-op fast path when disabled, exporting Chrome trace-event JSON
+  (perfetto-loadable).  The CP thread, transfer-pool workers, supervisor
+  and serving replicas land on one timeline; multi-process runs merge
+  per-process files from a shared ``OPENCHK_TRACE_DIR``.
+- :mod:`repro.telemetry.metrics` — counter/gauge/histogram registry fed
+  by the same instrumentation points, with a JSON snapshot and
+  Prometheus text exposition.
+- :mod:`repro.telemetry.health` — a real stdlib HTTP endpoint
+  (``/healthz`` / ``/readyz`` / ``/metrics``) per serving replica and
+  per supervisor; readiness flips with ``WeightsHandle`` epoch swaps.
+
+``repro.tools.chktrace`` summarizes an exported trace (critical path of
+a store, goodput timeline, span-measured MTTR) with ``--json`` for CI.
+"""
+from repro.telemetry import health, metrics, trace
+
+__all__ = ["trace", "metrics", "health"]

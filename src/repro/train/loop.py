@@ -26,6 +26,7 @@ from repro.data.synthetic import next_batch
 from repro.ft.detector import Heartbeat
 from repro.ft.failures import FaultInjector, SimulatedFault
 from repro.models.zoo import Model
+from repro.telemetry import trace as ttrace
 from repro.train.state import TrainState
 
 
@@ -92,9 +93,13 @@ def run_training(
 
     # ---- chk load: transparent restart ---------------------------------- #
     t_load = time.time()
-    state = ckpt.load(state)
+    with ttrace.span("train.load"):
+        state = ckpt.load(state)
     start = int(state.step)
     if ckpt.restarted:
+        # the resume marker chktrace pairs with the chaos.fault instant:
+        # fault → death → restart → THIS event is the recovery narrative
+        ttrace.instant("train.resume", step=start)
         log(f"[openchk] restart detected → resuming from step {start}")
         if cadence is not None:
             # a restart is a failure observation plus a recovery-cost sample
